@@ -1,0 +1,54 @@
+"""Fig. 9 + Table 6 — SeedMap-query throughput across memory systems.
+
+The paper's NMSL saturates HBM2 (192.7 MPair/s) and scales with memory
+bandwidth (DDR5 16.9, GDDR6 19.8 MPair/s).  On TPU there is no NMSL to
+tape out; the faithful analogue is the *memory roofline* of the query
+stage: bytes-touched per pair (measured from the jitted HLO's
+cost_analysis) divided into each technology's bandwidth.  This reproduces
+the paper's scaling law — throughput proportional to memory bandwidth with
+a technology-independent bytes/pair constant — and adds the TPU v5e HBM
+point our deployment uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import reads_for, row
+from repro.core import PipelineConfig
+from repro.core.query import query_read_batch
+from repro.core.seeding import seed_read_batch
+
+BW = {  # bytes/s
+    "ddr5_4ch": 4 * 38.4e9,      # paper's DDR5 config
+    "gddr6_8ch": 8 * 64e9,
+    "hbm2_32ch": 32 * 32e9,      # 1 TB/s aggregate, paper's NMSL target
+    "tpu_v5e_hbm": 819e9,        # our deployment
+}
+PAPER_MPAIR = {"ddr5_4ch": 16.91, "gddr6_8ch": 19.80, "hbm2_32ch": 192.7}
+
+
+def run() -> list[dict]:
+    cfg = PipelineConfig()
+    ref, sm, ref_j, sim = reads_for(300_000, 1024, 1e-3)
+    reads1 = jnp.asarray(sim.reads1)
+    seeds = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                            sm.config.hash_seed)
+    fn = jax.jit(lambda s: query_read_batch(sm, s, cfg.max_locs_per_seed))
+    compiled = fn.lower(seeds).compile()
+    ca = compiled.cost_analysis()
+    bytes_total = float(ca.get("bytes accessed", 0.0))
+    B = reads1.shape[0]
+    bytes_per_pair = 2 * bytes_total / B  # both mates
+    rows = [row("fig9/bytes_per_pair", 0.0,
+                bytes=round(bytes_per_pair, 1),
+                note="HLO bytes-accessed of the query stage")]
+    for name, bw in BW.items():
+        mpair = bw / bytes_per_pair / 1e6
+        d = {"roofline_mpair_per_s": round(mpair, 1)}
+        if name in PAPER_MPAIR:
+            d["paper_mpair_per_s"] = PAPER_MPAIR[name]
+            d["paper_fraction_of_roofline"] = round(
+                PAPER_MPAIR[name] / mpair, 3)
+        rows.append(row(f"fig9/{name}", 0.0, **d))
+    return rows

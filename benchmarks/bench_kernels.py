@@ -1,0 +1,85 @@
+"""Kernel microbenches: Pallas (interpret) vs pure-jnp oracle vs jitted op.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-times are *correctness-path* timings only; the roofline numbers for
+the TPU path come from the dry-run (EXPERIMENTS.md §Roofline).  Rows
+assert allclose against each ref oracle as a side effect.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core.scoring import Scoring
+from repro.kernels.banded_sw.ops import banded_sw
+from repro.kernels.banded_sw.ref import gotoh_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.light_align.ops import light_align as light_align_op
+from repro.kernels.light_align.ref import light_align_ref
+from repro.kernels.seed_gather.ops import seed_gather
+from repro.kernels.seed_gather.ref import seed_gather_ref
+from repro.kernels.xxhash.ops import xxhash32
+from repro.kernels.xxhash.ref import xxhash32_ref
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> list[dict]:
+    rows = []
+
+    # xxhash: 16k packed 50-mers
+    w = jnp.asarray(RNG.integers(0, 2**32, (16384, 4),
+                                 dtype=np.uint64).astype(np.uint32))
+    t_ref = time_fn(jax.jit(lambda x: xxhash32_ref(x, 0)), w)
+    out_i = xxhash32(w, backend="interpret")
+    ok = bool((np.asarray(out_i) == np.asarray(xxhash32_ref(w, 0))).all())
+    rows.append(row("kernels/xxhash_16k", t_ref, interpret_matches=ok))
+
+    # light_align: 1024 windows
+    reads = jnp.asarray(RNG.integers(0, 4, (1024, 150), dtype=np.uint8))
+    wins = jnp.asarray(RNG.integers(0, 4, (1024, 166), dtype=np.uint8))
+    sc = Scoring()
+    t_ref = time_fn(jax.jit(
+        lambda r, w: light_align_ref(r, w, 8, sc, 276)), reads, wins)
+    o_i = light_align_op(reads, wins, 8, sc, 276, backend="interpret")
+    o_r = light_align_ref(reads, wins, 8, sc, 276)
+    ok = bool((np.asarray(o_i.score) == np.asarray(o_r.score)).all())
+    rows.append(row("kernels/light_align_1k", t_ref, interpret_matches=ok))
+
+    # banded_sw: 256 alignments, W=182
+    reads_b = jnp.asarray(RNG.integers(0, 4, (256, 150), dtype=np.uint8))
+    wins_b = jnp.asarray(RNG.integers(0, 4, (256, 182), dtype=np.uint8))
+    t_ref = time_fn(jax.jit(lambda r, w: gotoh_ref(r, w, sc)),
+                    reads_b, wins_b)
+    s_i = banded_sw(reads_b, wins_b, sc, backend="interpret")
+    s_r = gotoh_ref(reads_b, wins_b, sc)
+    ok = bool((np.asarray(s_i.score) == np.asarray(s_r.score)).all())
+    rows.append(row("kernels/banded_sw_256", t_ref, interpret_matches=ok))
+
+    # seed_gather: 2^16-bucket padded table, 8k queries
+    table = jnp.asarray(RNG.integers(0, 2**20, (65536, 32),
+                                     dtype=np.int64).astype(np.int32))
+    idx = jnp.asarray(RNG.integers(0, 65536, (8192,),
+                                   dtype=np.int64).astype(np.int32))
+    t_ref = time_fn(jax.jit(lambda t, i: seed_gather_ref(t, i)), table, idx)
+    g_i = seed_gather(table, idx, backend="interpret")
+    g_r = seed_gather_ref(table, idx)
+    ok = bool((np.asarray(g_i) == np.asarray(g_r)).all())
+    rows.append(row("kernels/seed_gather_8k", t_ref, interpret_matches=ok))
+
+    # flash attention: BH=4 S=512 D=64 (kernel takes fused batch*heads)
+    q = jnp.asarray(RNG.normal(size=(4, 512, 64)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(4, 512, 64)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(4, 512, 64)).astype(np.float32))
+    t_ref = time_fn(jax.jit(lambda q, k, v: attention_ref(q, k, v,
+                                                          causal=True)),
+                    q, k, v)
+    o_i = flash_attention(q, k, v, causal=True, backend="interpret")
+    o_r = attention_ref(q, k, v, causal=True)
+    ok = bool(np.allclose(np.asarray(o_i), np.asarray(o_r), atol=2e-5))
+    rows.append(row("kernels/flash_attention_512", t_ref,
+                    interpret_matches=ok))
+    return rows

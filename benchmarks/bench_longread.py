@@ -1,0 +1,52 @@
+"""§4.7 / Fig. 11 (sixth observation) — long-read throughput.
+
+The paper reports roughly an order of magnitude lower throughput for long
+reads than short pairs (more DP fallback, more segments per read).  We
+measure pairs/s-equivalent bp/s of short-pair mapping vs long-read mapping
+(pseudo-pair decomposition + location voting + DP anchor verification).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, world
+from repro.core import PipelineConfig, ReadSimConfig, map_pairs, simulate_pairs
+from repro.core.long_read import LongReadConfig, map_long_reads
+
+
+def run() -> list[dict]:
+    ref, sm, ref_j = world(400_000, 19)
+    rng = np.random.default_rng(3)
+
+    # short pairs: 512 pairs x 300 bp
+    sim = simulate_pairs(ref, 512, ReadSimConfig(sub_rate=1e-3), seed=43)
+    r1, r2 = jnp.asarray(sim.reads1), jnp.asarray(sim.reads2)
+    t_short = time_fn(lambda: map_pairs(sm, ref_j, r1, r2))
+    bp_short = 512 * 300
+
+    # long reads: 16 reads x 4.5 kbp at 1% error (PacBio-like)
+    L = 4500
+    starts = rng.integers(64, len(ref) - L - 64, size=16)
+    reads = np.stack([ref[s : s + L].copy() for s in starts])
+    errs = rng.random(reads.shape) < 0.01
+    reads[errs] = (reads[errs] + rng.integers(1, 4, errs.sum())) % 4
+    lr = jnp.asarray(reads.astype(np.uint8))
+    cfg = LongReadConfig()
+    t_long = time_fn(lambda: map_long_reads(sm, ref_j, lr, cfg))
+    bp_long = 16 * L
+
+    res = map_long_reads(sm, ref_j, lr, cfg)
+    correct = (np.abs(np.asarray(res.position) - starts)
+               <= cfg.vote_bin).mean()
+    return [
+        row("longread/short_pairs", t_short,
+            bp_per_us=round(bp_short / t_short, 3)),
+        row("longread/long_reads", t_long,
+            bp_per_us=round(bp_long / t_long, 3),
+            mapped_correct=round(float(correct), 3)),
+        row("longread/ratio", 0.0,
+            short_over_long=round((bp_short / t_short)
+                                  / (bp_long / t_long), 2),
+            paper="~10x lower for long reads"),
+    ]

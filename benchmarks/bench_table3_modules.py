@@ -1,0 +1,73 @@
+"""Table 3 — per-module throughput and pipeline balancing.
+
+The paper sizes its ASIC pipeline from per-module throughputs
+(seeding 333 MPair/s, adjacency 83 MPair/s, light-align 1.1 MPair/s per
+instance) against NMSL's 192.7 MPair/s.  The TPU analogue: per-stage
+pairs/s of the jitted stages on this host, and the derived "instance
+ratio" — how many copies of each stage one would provision to balance a
+pipeline against the query stage (the paper's Table 3 #Instances logic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import reads_for, row, time_fn
+from repro.core import PipelineConfig
+from repro.core.light_align import gather_ref_windows, light_align
+from repro.core.pair_filter import paired_adjacency_filter
+from repro.core.query import query_read_batch
+from repro.core.seeding import seed_read_batch
+
+
+def run() -> list[dict]:
+    cfg = PipelineConfig()
+    ref, sm, ref_j, sim = reads_for(300_000, 1024, 1e-3)
+    reads1 = jnp.asarray(sim.reads1)
+    reads2f = jnp.asarray((3 - sim.reads2)[:, ::-1])
+    B, R = reads1.shape
+
+    seed_fn = jax.jit(lambda a, b: (
+        seed_read_batch(a, cfg.seed_len, cfg.seeds_per_read,
+                        sm.config.hash_seed),
+        seed_read_batch(b, cfg.seed_len, cfg.seeds_per_read,
+                        sm.config.hash_seed)))
+    t_seed = time_fn(seed_fn, reads1, reads2f)
+    s1, s2 = seed_fn(reads1, reads2f)
+
+    query_fn = jax.jit(lambda a, b: (
+        query_read_batch(sm, a, cfg.max_locs_per_seed),
+        query_read_batch(sm, b, cfg.max_locs_per_seed)))
+    t_query = time_fn(query_fn, s1, s2)
+    q1, q2 = query_fn(s1, s2)
+
+    adj_fn = jax.jit(lambda a, b: paired_adjacency_filter(
+        a, b, cfg.delta, cfg.max_candidates))
+    t_adj = time_fn(adj_fn, q1, q2)
+    cands = adj_fn(q1, q2)
+
+    def light_fn(r, starts):
+        safe = jnp.where(starts != jnp.int32(2**31 - 1), starts, 0)
+        wins = gather_ref_windows(ref_j, safe, R, cfg.max_gap)
+        C = starts.shape[1]
+        rt = jnp.broadcast_to(r[:, None], (B, C, R)).reshape(B * C, R)
+        return light_align(rt, wins.reshape(B * C, -1), cfg.max_gap,
+                           cfg.scoring, cfg.threshold(), cfg.light_mode)
+    t_light = time_fn(jax.jit(light_fn), reads1, cands.pos1)
+
+    mpairs = lambda us: B / us  # pairs per microsecond = MPair/s
+    stages = {
+        "partitioned_seeding": (t_seed, 333.0),
+        "seedmap_query": (t_query, 192.7),
+        "paired_adjacency": (t_adj, 83.0),
+        "light_align": (t_light, 1.1 * 174),  # paper: per-instance x174
+    }
+    t_ref = t_query  # pipeline is provisioned against the query stage
+    rows = []
+    for name, (t, paper_mps) in stages.items():
+        rows.append(row(
+            f"table3/{name}", t,
+            mpair_per_s=round(mpairs(t), 4),
+            instances_to_balance=round(t / t_ref, 2),
+            paper_mpair_per_s=paper_mps))
+    return rows

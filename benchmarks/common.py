@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing: timing, CSV rows, cached worlds.
+
+Every benchmark module exposes `run() -> list[dict]`; each dict becomes a
+``name,us_per_call,derived`` CSV row (derived = the paper-table quantity
+the row reproduces, as `key=value` pairs).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
+    random_reference, simulate_pairs,
+)
+from repro.core.simulate import repetitive_reference
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, **derived) -> dict:
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def print_rows(rows: list[dict]) -> None:
+    for r in rows:
+        d = ";".join(f"{k}={v}" for k, v in r["derived"].items())
+        print(f"{r['name']},{r['us_per_call']:.1f},{d}", flush=True)
+
+
+@functools.lru_cache(maxsize=4)
+def world(ref_len: int = 300_000, table_bits: int = 19, seed: int = 0,
+          repetitive: bool = False, max_locations: int = 500):
+    """(ref, seedmap, ref_jnp) cached across benchmark modules."""
+    rng = np.random.default_rng(seed)
+    ref = (repetitive_reference(ref_len, rng) if repetitive
+           else random_reference(ref_len, rng))
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits,
+                                          max_locations=max_locations))
+    return ref, sm, jnp.asarray(ref)
+
+
+@functools.lru_cache(maxsize=8)
+def reads_for(ref_len: int, n: int, sub_rate: float, ins_rate: float = 2e-4,
+              del_rate: float = 2e-4, seed: int = 1, repetitive: bool = False,
+              table_bits: int = 19):
+    ref, sm, ref_j = world(ref_len, table_bits, 0, repetitive)
+    sim = simulate_pairs(
+        ref, n, ReadSimConfig(sub_rate=sub_rate, ins_rate=ins_rate,
+                              del_rate=del_rate), seed=seed)
+    return ref, sm, ref_j, sim

@@ -1,0 +1,73 @@
+"""Benchmark harness driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig10,table1]
+
+Prints ``name,us_per_call,derived`` CSV rows and writes
+artifacts/bench/results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+import traceback
+
+MODULES = [
+    ("fig1", "benchmarks.bench_fig1_breakdown"),
+    ("obs1", "benchmarks.bench_obs1_exact_match"),
+    ("obs2", "benchmarks.bench_obs2_locations"),
+    ("table1", "benchmarks.bench_table1_scores"),
+    ("fig8", "benchmarks.bench_fig8_capacity"),
+    ("fig9", "benchmarks.bench_fig9_nmsl_roofline"),
+    ("fig10", "benchmarks.bench_fig10_residuals"),
+    ("fig12", "benchmarks.bench_fig12_error_rate"),
+    ("fig13", "benchmarks.bench_fig13_threshold"),
+    ("table3", "benchmarks.bench_table3_modules"),
+    ("table5", "benchmarks.bench_table5_end2end"),
+    ("table7", "benchmarks.bench_table7_accuracy"),
+    ("longread", "benchmarks.bench_longread"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys")
+    args = ap.parse_args()
+    keys = set(args.only.split(",")) if args.only else None
+
+    from benchmarks.common import print_rows
+    all_rows = []
+    failures = []
+    print("name,us_per_call,derived", flush=True)
+    for key, modname in MODULES:
+        if keys and key not in keys:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run()
+            print_rows(rows)
+            all_rows.extend(rows)
+            print(f"# {key}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — report all, fail at end
+            traceback.print_exc()
+            failures.append((key, repr(e)))
+            print(f"# {key}: FAILED {e!r}", flush=True)
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "results.json"), "w") as f:
+        json.dump({"rows": all_rows, "failures": failures}, f, indent=1,
+                  default=str)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

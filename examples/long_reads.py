@@ -1,0 +1,52 @@
+"""Long-read mapping via pseudo-pair decomposition + location voting
+(paper §4.7).
+
+Each long read is cut into interleaved 150 bp segments; consecutive
+segments form pseudo-pairs fed through the same Partitioned Seeding /
+SeedMap Query / Paired-Adjacency Filtering stages as short pairs, then
+Location Voting picks the consensus diagonal and banded DP verifies it.
+
+  PYTHONPATH=src python examples/long_reads.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SeedMapConfig, build_seedmap, random_reference
+from repro.core.long_read import LongReadConfig, map_long_reads
+
+
+def simulate_long_reads(ref, n, length, sub_rate, rng):
+    starts = rng.integers(64, len(ref) - length - 64, size=n)
+    reads = np.stack([ref[s : s + length].copy() for s in starts])
+    errs = rng.random(reads.shape) < sub_rate
+    reads[errs] = (reads[errs] + rng.integers(1, 4, errs.sum())) % 4
+    return reads.astype(np.uint8), starts.astype(np.int32)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("== indexing reference ==")
+    ref = random_reference(400_000, rng)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=19))
+
+    print("== mapping 32 long reads (4.5 kbp, 1% error — PacBio-like) ==")
+    reads, true_starts = simulate_long_reads(ref, 32, 4500, 0.01, rng)
+    cfg = LongReadConfig()
+    res = map_long_reads(sm, jnp.asarray(ref), jnp.asarray(reads), cfg)
+
+    pos = np.asarray(res.position)
+    mapped = np.asarray(res.mapped)
+    err = np.abs(pos - true_starts)
+    correct = mapped & (err <= cfg.vote_bin)
+    print(f"  mapped  : {mapped.mean():.1%}")
+    print(f"  correct : {correct.sum()}/{len(reads)} "
+          f"(within one {cfg.vote_bin} bp vote bin)")
+    print(f"  votes   : median {int(np.median(np.asarray(res.votes)))} "
+          f"per read ({(len(reads[0]) - 150) // 300 + 1} segments each)")
+    for i in range(5):
+        print(f"    read {i}: voted={pos[i]} true={true_starts[i]} "
+              f"votes={int(res.votes[i])} dp_score={int(res.score[i])}")
+
+
+if __name__ == "__main__":
+    main()

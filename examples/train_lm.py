@@ -1,0 +1,36 @@
+"""Train a ~100M-param LM end to end on CPU with the full substrate:
+deterministic data stream, AdamW + cosine schedule, atomic async
+checkpointing, preemption guard, straggler watchdog.
+
+The default config is a reduced yi-6b-family model (~100M params with the
+shrunken vocab).  A few hundred steps take a while on CPU; the default
+runs 120 steps and resumes automatically if re-run.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch yi-6b]
+"""
+import argparse
+
+from repro.launch.train import TrainRunConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    run = TrainRunConfig(
+        arch=args.arch, smoke=True, steps=args.steps,
+        global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_interval=50, log_interval=10,
+        peak_lr=3e-4, warmup_steps=20,
+    )
+    out = train(run)
+    print(f"final: {out}")
+
+
+if __name__ == "__main__":
+    main()

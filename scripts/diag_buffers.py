@@ -1,0 +1,71 @@
+"""Buffer diagnostic: compile a reduced-layer cell and list the biggest
+HLO buffers (the 'where did my HBM go' tool used in §Perf).
+
+  PYTHONPATH=src python scripts/diag_buffers.py <arch> <shape> [k_layers]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402,F401
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+from repro.launch.dryrun import (  # noqa: E402
+    lower_cell, serving_cfg, training_cfg, with_layers,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding.partition import PROD_RULES  # noqa: E402
+
+BYTES = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "f16": 2, "s8": 1,
+         "u8": 1, "pred": 1, "s64": 8}
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    k = int(sys.argv[3]) if len(sys.argv) > 3 else 1
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    base = (training_cfg(cfg, False, shape) if shape.kind == "train"
+            else serving_cfg(cfg, False))
+    ck = with_layers(base, k)
+    mesh = make_production_mesh()
+    low, n = lower_cell(ck, shape, mesh, PROD_RULES, unroll=False,
+                        moe_groups=32)
+    comp = low.compile()
+    ma = comp.memory_analysis()
+    print(f"{arch} {shape_name} k={k}: "
+          f"temp {ma.temp_size_in_bytes/2**30:.2f} GiB, "
+          f"args {ma.argument_size_in_bytes/2**30:.2f} GiB")
+    pat = re.compile(r"\b(f32|bf16|f16|s32|u32|s8|u8|pred|s64)\[([0-9,]+)\]")
+    agg = {}
+    for m in pat.finditer(comp.as_text()):
+        dt, dims = m.groups()
+        n_el = 1
+        for d in dims.split(","):
+            n_el *= int(d)
+        b = n_el * BYTES[dt]
+        if b >= 2**26:  # >=64 MiB
+            key = m.group(0)
+            agg[key] = agg.get(key, 0) + 1
+    print("shape x occurrences (>=64MiB buffers):")
+    for kk, v in sorted(agg.items(),
+                        key=lambda kv: -kv[1] * _sz(kv[0]))[:25]:
+        print(f"  {kk}  x{v}  ({_sz(kk)/2**20:.0f} MiB each)")
+
+
+def _sz(key):
+    dt, dims = re.match(r"(\w+)\[([0-9,]*)\]", key).groups()
+    n_el = 1
+    for d in dims.split(","):
+        n_el *= int(d)
+    return n_el * BYTES[dt]
+
+
+if __name__ == "__main__":
+    main()

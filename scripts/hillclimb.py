@@ -1,0 +1,78 @@
+"""§Perf hillclimb driver: re-lower a cell under a named variant and diff
+its roofline terms against the baseline artifact.
+
+  PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> <variant> \
+      [--rules fsdp_off|sp_off|batch2d|default] [--moe-groups N] \
+      [--multi-pod]
+
+Variants are free-form names recorded in the artifact; rule presets swap
+the sharding scheme without touching model code (ShardingRules is data).
+Code-level changes (kernel/block/remat edits) are made in the tree and
+re-run under a new variant name — the artifact diff is the measurement.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402
+from repro.sharding.partition import ShardingRules  # noqa: E402
+
+RULES = {
+    "default": None,
+    "fsdp_off": ShardingRules(fsdp_axis=None),
+    "sp_off": ShardingRules(act_seq_axis=None),
+    "fsdp_off_sp_off": ShardingRules(fsdp_axis=None, act_seq_axis=None),
+    "batch2d": ShardingRules(batch_axes=("data", "model"),
+                             act_seq_axis=None),
+}
+MP_RULES = {
+    "default": None,
+    "fsdp_off": ShardingRules(batch_axes=("pod", "data"), fsdp_axis=None),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("variant")
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--moe-groups", type=int, default=32)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--prescreen", type=int, default=0,
+                    help="genpair: prescreen_top candidates")
+    args = ap.parse_args()
+
+    rules = (MP_RULES if args.multi_pod else RULES)[args.rules]
+    gp_cfg = None
+    if args.prescreen:
+        from repro.core.pipeline import PipelineConfig
+        gp_cfg = PipelineConfig(prescreen_top=args.prescreen)
+    res = dryrun.run_cell(args.arch, args.shape, args.multi_pod,
+                          rules=rules, moe_groups=args.moe_groups,
+                          variant=args.variant, genpair_cfg=gp_cfg)
+    mesh = "multipod_512" if args.multi_pod else "pod_256"
+    base_path = os.path.join(
+        dryrun.ARTIFACT_DIR, f"{args.arch}__{args.shape}__{mesh}.json")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        b, n = base.get("roofline", {}), res.get("roofline", {})
+        print(f"\n=== {args.arch} {args.shape} [{args.variant}] vs baseline")
+        for term in ("compute_s", "memory_s", "collective_s"):
+            bv, nv = b.get(term, 0), n.get(term, 0)
+            d = (nv - bv) / bv * 100 if bv else float("nan")
+            print(f"  {term:14s} {bv:10.4g} -> {nv:10.4g}  ({d:+.1f} %)")
+        bm = base.get("memory", {}).get("total_nonalias_bytes", 0) / 2**30
+        nm = res.get("memory", {}).get("total_nonalias_bytes", 0) / 2**30
+        print(f"  {'mem GiB':14s} {bm:10.2f} -> {nm:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

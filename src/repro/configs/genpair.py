@@ -1,0 +1,43 @@
+"""The paper's own workload as a selectable config (`--arch genpair`).
+
+Unlike the LM archs this is a genomics *serving* workload: the "model" is
+the SeedMap index + the GenPair pipeline; the "shape" is read pairs per
+step.  Scales:
+
+  serve_256k  — 262,144 pairs/step at human-genome scale (GRCh38-sized
+                index: 2^30 buckets, ~3e9 locations).  The dry-run cell.
+  smoke       — CPU-testable miniature of the same topology.
+
+The GenPairScale/PipelineConfig pair plays the role ModelConfig plays for
+the LM archs; repro/launch/dryrun.py lowers `make_genpair_serve_step`
+against these specs on the production meshes.
+"""
+from __future__ import annotations
+
+from repro.core.genpairx_step import GenPairScale
+from repro.core.pipeline import PipelineConfig
+from repro.core.seedmap import SeedMapConfig
+
+# dry-run scale (the paper's deployment: GRCh38 + 100M-pair datasets)
+SCALE = GenPairScale(
+    genome_len=3_000_000_000,
+    table_bits=30,
+    n_locations=3_000_000_000,
+    global_batch=262_144,
+    read_len=150,
+)
+
+PIPELINE = PipelineConfig()
+SEEDMAP = SeedMapConfig(table_bits=SCALE.table_bits)
+
+# CPU-testable miniature (same topology, ~1e5 reference)
+SMOKE_SCALE = GenPairScale(
+    genome_len=100_000,
+    table_bits=16,
+    n_locations=100_000,
+    global_batch=64,
+    read_len=150,
+)
+SMOKE_SEEDMAP = SeedMapConfig(table_bits=SMOKE_SCALE.table_bits)
+
+SHAPE_NAMES = ("serve_256k",)

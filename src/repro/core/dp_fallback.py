@@ -1,0 +1,141 @@
+"""DP fallback (GenDP analogue): affine-gap Gotoh alignment in JAX.
+
+Residual read-pairs that Light Alignment cannot accept (§7.4, Fig. 10) are
+aligned with a semiglobal Gotoh DP: the read is global, the reference
+window has free leading/trailing gaps.  The row recurrence is vectorized
+with the running-max (scan) formulation so each row is O(W) vector work —
+the TPU-native mapping of GenDP's systolic wavefront (DESIGN.md §2).
+
+`gotoh_semiglobal` is the jit-able score path used by the pipeline;
+`gotoh_align_np` is the host-side traceback oracle (also used by tests to
+validate Light Alignment's exactness on single-gap-run inputs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scoring import Scoring
+
+NEG = -(1 << 20)
+
+
+class DPResult(NamedTuple):
+    score: jnp.ndarray    # (B,) int32
+    ref_end: jnp.ndarray  # (B,) int32 end column (bases of window consumed)
+
+
+def gotoh_semiglobal(
+    read: jnp.ndarray, refwin: jnp.ndarray, scoring: Scoring = Scoring()
+) -> DPResult:
+    """Batched semiglobal Gotoh. read (B, R) uint8, refwin (B, W) uint8."""
+    B, R = read.shape
+    W = refwin.shape[-1]
+    match = jnp.int32(scoring.match)
+    mis = jnp.int32(scoring.mismatch)
+    open_ = jnp.int32(scoring.gap_open)
+    ext = jnp.int32(scoring.gap_extend)
+    first = open_ + ext  # cost of the first base of a gap run
+
+    j_idx = jnp.arange(W + 1, dtype=jnp.int32)
+
+    # Row 0: free leading reference gaps.
+    h0 = jnp.zeros((B, W + 1), jnp.int32)
+    e0 = jnp.full((B, W + 1), NEG, jnp.int32)
+
+    def row(carry, read_col):
+        h_prev, e_prev, i = carry
+        # E: gap in reference (unaligned read base), vertical move.
+        e = jnp.maximum(h_prev - first, e_prev - ext)
+        sub = jnp.where(read_col[:, None] == refwin, match, -mis)  # (B, W)
+        diag = h_prev[:, :-1] + sub
+        h_tmp = jnp.maximum(diag, e[:, 1:])
+        # Column 0: read prefix unaligned (charged insertion).
+        col0 = -(open_ + ext * i)
+        h_tmp = jnp.concatenate([jnp.full((B, 1), col0, jnp.int32), h_tmp], -1)
+        h_tmp = jnp.maximum(h_tmp, e.at[:, 0].set(NEG))
+        # F: gap in read (deletion), horizontal — running-max formulation:
+        # F[j] = max_{j'<j} H[j'] + ext*j' - open - ext*j.
+        g = h_tmp + ext * j_idx[None, :]
+        gmax = jax.lax.cummax(g, axis=1)
+        f = jnp.concatenate(
+            [jnp.full((B, 1), NEG, jnp.int32), gmax[:, :-1]], -1
+        ) - open_ - ext * j_idx[None, :]
+        h = jnp.maximum(h_tmp, f)
+        return (h, e, i + 1), None
+
+    (h_last, _, _), _ = jax.lax.scan(
+        row, (h0, e0, jnp.int32(1)), read.T  # scan over read positions
+    )
+    score = jnp.max(h_last, axis=-1)
+    ref_end = jnp.argmax(h_last, axis=-1).astype(jnp.int32)
+    return DPResult(score=score, ref_end=ref_end)
+
+
+def gotoh_align_np(
+    read: np.ndarray, refwin: np.ndarray, scoring: Scoring = Scoring()
+) -> tuple[int, list[tuple[str, int]], int]:
+    """Host-side Gotoh with traceback.
+
+    Returns (score, cigar_runs [(op, len)] with ops in 'MID', ref_begin).
+    Semiglobal: read global, reference window free end gaps.
+    """
+    read = np.asarray(read)
+    refwin = np.asarray(refwin)
+    R, W = len(read), len(refwin)
+    first = scoring.gap_open + scoring.gap_extend
+    ext = scoring.gap_extend
+    H = np.zeros((R + 1, W + 1), np.int64)
+    E = np.full((R + 1, W + 1), NEG, np.int64)  # gap in ref (read base unaligned, 'I')
+    F = np.full((R + 1, W + 1), NEG, np.int64)  # gap in read ('D')
+    for i in range(1, R + 1):
+        H[i, 0] = -(scoring.gap_open + ext * i)
+    for i in range(1, R + 1):
+        for j in range(0, W + 1):
+            E[i, j] = max(H[i - 1, j] - first, E[i - 1, j] - ext)
+            if j > 0:
+                F[i, j] = max(H[i, j - 1] - first, F[i, j - 1] - ext)
+                sub = scoring.match if read[i - 1] == refwin[j - 1] else -scoring.mismatch
+                H[i, j] = max(H[i - 1, j - 1] + sub, E[i, j], F[i, j])
+            else:
+                H[i, j] = E[i, j]
+    j = int(np.argmax(H[R]))
+    score = int(H[R, j])
+    # Traceback.
+    ops: list[str] = []
+    i = R
+    state = "H"
+    while i > 0:
+        if state == "H":
+            if j > 0 and H[i, j] == H[i - 1, j - 1] + (
+                scoring.match if read[i - 1] == refwin[j - 1] else -scoring.mismatch
+            ):
+                ops.append("M")
+                i -= 1
+                j -= 1
+            elif H[i, j] == E[i, j]:
+                state = "E"
+            else:
+                state = "F"
+        elif state == "E":
+            ops.append("I")
+            nxt = "E" if E[i, j] == E[i - 1, j] - ext else "H"
+            i -= 1
+            state = nxt
+        else:  # F
+            ops.append("D")
+            nxt = "F" if F[i, j] == F[i, j - 1] - ext else "H"
+            j -= 1
+            state = nxt
+    ref_begin = j
+    ops.reverse()
+    runs: list[tuple[str, int]] = []
+    for op in ops:
+        if runs and runs[-1][0] == op:
+            runs[-1] = (op, runs[-1][1] + 1)
+        else:
+            runs.append((op, 1))
+    return score, runs, ref_begin

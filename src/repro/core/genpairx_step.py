@@ -1,0 +1,211 @@
+"""GenPairX production serve step: the paper's workload on the TPU mesh.
+
+This is the dry-run / deployment entry for the genomics pipeline itself
+(`--arch genpair`): SeedMap sharded by bucket range across the `model` axis
+(the NMSL channel-striping analogue), read batch sharded across
+(`pod`,)`data`, reference 2-bit packed and replicated, Light Alignment and
+DP fallback fully data-parallel.
+
+At human-genome scale (GRCh38): T = 2^30 buckets, ~3.0e9 locations,
+packed reference 775 MB/device, per-device Location Table shard ~750 MB.
+Positions are per-chromosome int32 offsets (as in the paper's
+chromosome+offset layout); the dry-run flattens them into one coordinate
+space for shape purposes (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import ShardedSeedMap, _local_query
+from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.encoding import gather_windows_packed
+from repro.core.light_align import cigar_ops, light_align
+from repro.core.pair_filter import paired_adjacency_filter
+from repro.core.pipeline import (
+    M_DP, M_DP_OVERFLOW, M_LIGHT, M_RESIDUAL_FULL, M_UNMAPPED, MapResult,
+    PipelineConfig,
+)
+from repro.core.query import merge_read_starts
+from repro.core.seeding import seed_read_batch
+from repro.core.seedmap import INVALID_LOC, SeedMapConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GenPairScale:
+    """Genome-scale dimensioning for the dry-run."""
+
+    genome_len: int = 3_000_000_000
+    table_bits: int = 30
+    n_locations: int = 3_000_000_000
+    global_batch: int = 262_144     # read pairs per step
+    read_len: int = 150
+
+
+jax.tree_util.register_static(GenPairScale)
+
+
+def genpair_input_specs(scale: GenPairScale, n_model_shards: int) -> dict:
+    """ShapeDtypeStruct stand-ins for the genome-scale serve step."""
+    T = 1 << scale.table_bits
+    per = T // n_model_shards
+    nmax = scale.n_locations // n_model_shards
+    lw = scale.genome_len // 16 + 1
+    B, R = scale.global_batch, scale.read_len
+    return {
+        "offsets": jax.ShapeDtypeStruct((n_model_shards, per + 1), jnp.int32),
+        "locations": jax.ShapeDtypeStruct((n_model_shards, nmax), jnp.int32),
+        "ref_words": jax.ShapeDtypeStruct((lw,), jnp.uint32),
+        "reads1": jax.ShapeDtypeStruct((B, R), jnp.uint8),
+        "reads2": jax.ShapeDtypeStruct((B, R), jnp.uint8),
+    }
+
+
+def genpair_shardings(mesh: Mesh, batch_axes=("data",), model_axis="model"):
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+    return {
+        "offsets": sh(model_axis),
+        "locations": sh(model_axis),
+        "ref_words": sh(),
+        "reads1": sh(batch_axes),
+        "reads2": sh(batch_axes),
+    }
+
+
+def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
+                            sm_cfg: SeedMapConfig,
+                            batch_axes=("data",), model_axis="model"):
+    """Returns serve_step(offsets, locations, ref_words, reads1, reads2)."""
+
+    K = pipe_cfg.max_locs_per_seed
+
+    def _sharded_query(offsets, locations, hashes):
+        def inner(off, loc, h):
+            sid = jax.lax.axis_index(model_axis)
+            locs, _ = _local_query(off[0], loc[0], sid, h, sm_cfg, K)
+            return jax.lax.pmin(locs, model_axis)
+        return jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(model_axis), P(model_axis), P(batch_axes)),
+            out_specs=P(batch_axes),
+        )(offsets, locations, hashes)
+
+    def serve_step(offsets, locations, ref_words, reads1, reads2):
+        cfg = pipe_cfg
+        B, R = reads1.shape
+        reads2_fwd = (3 - reads2)[:, ::-1]
+        seeds1 = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                                 sm_cfg.hash_seed)
+        seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len,
+                                 cfg.seeds_per_read, sm_cfg.hash_seed)
+        locs1 = _sharded_query(offsets, locations, seeds1.hashes)
+        locs2 = _sharded_query(offsets, locations, seeds2.hashes)
+        q1 = merge_read_starts(locs1, seeds1.offsets)
+        q2 = merge_read_starts(locs2, seeds2.offsets)
+        had_hits = (q1.n_hits > 0) & (q2.n_hits > 0)
+        cands = paired_adjacency_filter(q1, q2, cfg.delta,
+                                        cfg.max_candidates)
+        passed = cands.n > 0
+
+        E = cfg.max_gap
+        valid_c = cands.pos1 != INVALID_LOC
+
+        def windows_for(starts):
+            safe = jnp.where(starts != INVALID_LOC, starts - E, 0)
+            return gather_windows_packed(ref_words, safe, R + 2 * E)
+
+        wins1 = windows_for(cands.pos1)            # (B, C, R+2E)
+        wins2 = windows_for(cands.pos2)
+        pos1s, pos2s = cands.pos1, cands.pos2
+        if 0 < cfg.prescreen_top < cfg.max_candidates:
+            # §Perf G2: one zero-shift Hamming count per candidate *pair*
+            # (the XOR compare the paper's hardware does in one cycle),
+            # then full shifted-mask alignment only on the top P pairs.
+            # Pairing is preserved: both mates are ranked jointly.
+            P = cfg.prescreen_top
+            mm0 = (jnp.sum(wins1[..., E:E + R] != reads1[:, None, :], -1)
+                   + jnp.sum(wins2[..., E:E + R]
+                             != reads2_fwd[:, None, :], -1)).astype(
+                jnp.int32)
+            mm0 = jnp.where(valid_c, mm0, 1 << 20)
+            _, top = jax.lax.top_k(-mm0, P)        # (B, P)
+            wins1 = jnp.take_along_axis(wins1, top[..., None], 1)
+            wins2 = jnp.take_along_axis(wins2, top[..., None], 1)
+            pos1s = jnp.take_along_axis(cands.pos1, top, 1)
+            pos2s = jnp.take_along_axis(cands.pos2, top, 1)
+            valid_c = jnp.take_along_axis(valid_c, top, 1)
+
+        C = pos1s.shape[1]
+
+        def run_light(reads, wins):
+            res = light_align(
+                jnp.broadcast_to(reads[:, None], (B, C, R)).reshape(-1, R),
+                wins.reshape(B * C, -1), E, cfg.scoring,
+                cfg.threshold(), cfg.light_mode)
+            sc = jnp.where(valid_c.reshape(-1), res.score,
+                           -(1 << 20)).reshape(B, C)
+            return res, sc
+
+        res1, sc1 = run_light(reads1, wins1)
+        res2, sc2 = run_light(reads2_fwd, wins2)
+        best = jnp.argmax(sc1 + sc2, axis=-1)
+
+        def takec(x):
+            x = x.reshape((B, C) + x.shape[1:])
+            return jnp.take_along_axis(
+                x, best.reshape((B, 1) + (1,) * (x.ndim - 2)), 1)[:, 0]
+
+        b_pos1 = jnp.take_along_axis(pos1s, best[:, None], 1)[:, 0]
+        b_pos2 = jnp.take_along_axis(pos2s, best[:, None], 1)[:, 0]
+        b_sc1 = jnp.take_along_axis(sc1, best[:, None], 1)[:, 0]
+        b_sc2 = jnp.take_along_axis(sc2, best[:, None], 1)[:, 0]
+        ok1 = takec(res1.ok[:, None])[:, 0] & (b_pos1 != INVALID_LOC)
+        ok2 = takec(res2.ok[:, None])[:, 0] & (b_pos2 != INVALID_LOC)
+        light_ok = passed & ok1 & ok2
+        cig1 = takec(cigar_ops(res1, R))
+        cig2 = takec(cigar_ops(res2, R))
+
+        # fixed-capacity DP residual
+        needs_dp = passed & ~light_ok
+        cap = max(1, int(round(B * cfg.residual_capacity_frac)))
+        order = jnp.argsort(~needs_dp, stable=True)
+        dp_idx = order[:cap]
+        dp_take = needs_dp[dp_idx]
+        safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
+                          b_pos1[dp_idx] - cfg.dp_pad, 0)
+        safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
+                          b_pos2[dp_idx] - cfg.dp_pad, 0)
+        win1 = gather_windows_packed(ref_words, safe1, R + 2 * cfg.dp_pad)
+        win2 = gather_windows_packed(ref_words, safe2, R + 2 * cfg.dp_pad)
+        dp1 = gotoh_semiglobal(reads1[dp_idx], win1, cfg.scoring)
+        dp2 = gotoh_semiglobal(reads2_fwd[dp_idx], win2, cfg.scoring)
+        neg = -(1 << 20)
+        dp_sc1 = jnp.full((B,), neg, jnp.int32).at[dp_idx].set(
+            jnp.where(dp_take, dp1.score, neg))
+        dp_sc2 = jnp.full((B,), neg, jnp.int32).at[dp_idx].set(
+            jnp.where(dp_take, dp2.score, neg))
+        dp_done = jnp.zeros((B,), bool).at[dp_idx].set(dp_take)
+
+        method = jnp.full((B,), M_UNMAPPED, jnp.int32)
+        method = jnp.where(~had_hits | (had_hits & ~passed),
+                           M_RESIDUAL_FULL, method)
+        method = jnp.where(light_ok, M_LIGHT, method)
+        method = jnp.where(dp_done, M_DP, method)
+        method = jnp.where(needs_dp & ~dp_done, M_DP_OVERFLOW, method)
+        mapped = light_ok | dp_done
+        return MapResult(
+            pos1=jnp.where(mapped, b_pos1, INVALID_LOC),
+            pos2=jnp.where(mapped, b_pos2, INVALID_LOC),
+            score1=jnp.where(light_ok, b_sc1,
+                             jnp.where(dp_done, dp_sc1, neg)),
+            score2=jnp.where(light_ok, b_sc2,
+                             jnp.where(dp_done, dp_sc2, neg)),
+            method=method, cigar1=cig1, cigar2=cig2,
+            had_hits=had_hits, passed_adjacency=passed, light_ok=light_ok,
+        )
+
+    return serve_step

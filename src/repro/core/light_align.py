@@ -1,0 +1,212 @@
+"""Light Alignment (§4.6): SHD-style XOR alignment with exact score + CIGAR.
+
+Given a candidate read-start position, the reference window
+``refwin = ref[start - E : start + R + E]`` is compared against the read
+under 2E+1 shift hypotheses (shift +k = k-base insertion in the read,
+shift -k = k-base deletion), plus the mismatch-only hypothesis.
+
+Two modes:
+
+- ``paper``: the paper's mechanism — longest all-match prefix of the 0-shift
+  mask + longest all-match suffix of the k-shift mask; a gap hypothesis is
+  accepted only if the runs cover the read (zero mismatches outside the gap).
+- ``minsplit`` (default, beyond-paper, DESIGN.md §3): per shift k, the split
+  point p minimizing ``mm(mask0[:p]) + mm(mask_k[p:])`` via two cumulative
+  sums — the optimal alignment with at most one interior gap run and any
+  number of mismatches.  Same vector cost, strictly larger accept set
+  (covers Table 1's "1 mismatch & 1 deletion" row and better).
+
+Both compute exact scores under `Scoring` and emit 3-run CIGARs.  The pure
+JAX implementation below is the reference path; `repro/kernels/light_align`
+is the Pallas TPU kernel with identical semantics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.scoring import Scoring
+
+# Edit-type codes.
+EDIT_NONE = 0       # mismatches only (possibly zero)
+EDIT_INS = 1        # k-base insertion in the read
+EDIT_DEL = 2        # k-base deletion from the read (ref consumes k extra)
+
+# CIGAR op codes (SAM order).
+CIG_M, CIG_I, CIG_D = 0, 1, 2
+
+BIG = jnp.int32(1 << 20)   # "infinite" mismatch count (score arithmetic)
+# Mismatch *counts* fit int16 (<= R <= 32767): all prefix-sum / candidate
+# tensors use s16, halving the bytes of the memory-dominant Light
+# Alignment stage (EXPERIMENTS.md SPerf, genpair iteration G1).  BIG16 is
+# the s16-safe sentinel; scores stay int32.
+BIG16 = jnp.int16(1 << 14)
+
+
+class LightAlignResult(NamedTuple):
+    score: jnp.ndarray       # (B,) int32 best score over hypotheses
+    ok: jnp.ndarray          # (B,) bool  score >= threshold (light path taken)
+    edit_type: jnp.ndarray   # (B,) int32 EDIT_*
+    edit_len: jnp.ndarray    # (B,) int32 gap run length (0 for EDIT_NONE)
+    edit_pos: jnp.ndarray    # (B,) int32 read split position p
+    n_mismatch: jnp.ndarray  # (B,) int32 mismatches of the chosen hypothesis
+
+
+def shifted_mismatch_masks(read: jnp.ndarray, refwin: jnp.ndarray, max_gap: int):
+    """(B, R), (B, R+2E) -> (B, 2E+1, R) bool; entry [:, E+s, i] is
+    read[i] != refwin[E+s+i] (shift s in [-E, +E])."""
+    R = read.shape[-1]
+    E = max_gap
+    # Static slices (not a gather): each shift is a contiguous window.
+    windows = jnp.stack(
+        [refwin[..., s : s + R] for s in range(2 * E + 1)], axis=-2
+    )  # (B, 2E+1, R)
+    return windows != read[..., None, :]
+
+
+def light_align(
+    read: jnp.ndarray,
+    refwin: jnp.ndarray,
+    max_gap: int,
+    scoring: Scoring = Scoring(),
+    threshold: int | None = None,
+    mode: str = "minsplit",
+) -> LightAlignResult:
+    """Batched Light Alignment.  read (B, R) uint8, refwin (B, R+2E) uint8."""
+    if mode not in ("minsplit", "paper"):
+        raise ValueError(f"unknown mode {mode!r}")
+    R = read.shape[-1]
+    E = max_gap
+    if refwin.shape[-1] != R + 2 * E:
+        raise ValueError("refwin must be read_len + 2*max_gap wide")
+    if threshold is None:
+        threshold = scoring.default_threshold(R)
+
+    masks = shifted_mismatch_masks(read, refwin, E)  # (B, 2E+1, R)
+    # cum[:, j, p] = # mismatches in mask_j[:p], p in [0, R]
+    cum = jnp.concatenate(
+        [
+            jnp.zeros(masks.shape[:-1] + (1,), jnp.int16),
+            jnp.cumsum(masks.astype(jnp.int16), axis=-1),
+        ],
+        axis=-1,
+    )  # (B, 2E+1, R+1) s16: counts <= R
+    cum0 = cum[:, E, :]          # zero-shift prefix mismatch counts
+    total = cum[:, :, R]         # (B, 2E+1) total mismatches per shift
+
+    m2 = scoring.match + scoring.mismatch  # score delta per mismatch (10)
+
+    # ---- hypothesis 0: mismatches only --------------------------------
+    mm_none = total[:, E].astype(jnp.int32)
+    score_none = scoring.match * R - m2 * mm_none
+
+    scores = [score_none]
+    types = [jnp.full_like(mm_none, EDIT_NONE)]
+    lens = [jnp.zeros_like(mm_none)]
+    poss = [jnp.zeros_like(mm_none)]
+    mms = [mm_none]
+
+    p_range = jnp.arange(R + 1, dtype=jnp.int32)
+
+    for k in range(1, E + 1):
+        # ---- deletion of k (ref consumes k extra bases) ----------------
+        # suffix read[p:] aligns at shift +k: mask index E + k.
+        cum_d = cum[:, E + k, :]
+        tot_d = cum_d[:, R:R + 1]
+        cand = cum0 + (tot_d - cum_d)                       # (B, R+1) mm(p)
+        interior = (p_range >= 1) & (p_range <= R - 1)
+        cand = jnp.where(interior[None, :], cand, BIG16)
+        if mode == "paper":
+            cand = jnp.where(cand == 0, cand, BIG16)
+        p_d = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+        mm_d = jnp.take_along_axis(cand, p_d[:, None],
+                                   axis=-1)[:, 0].astype(jnp.int32)
+        score_d = scoring.match * R - m2 * mm_d - scoring.gap_cost(k)
+        score_d = jnp.where(mm_d >= BIG16, -BIG, score_d)
+        scores.append(score_d)
+        types.append(jnp.full_like(mm_d, EDIT_DEL))
+        lens.append(jnp.full_like(mm_d, k))
+        poss.append(p_d)
+        mms.append(mm_d)
+
+        # ---- insertion of k (read has k unaligned bases) ---------------
+        # suffix read[p+k:] aligns at shift -k: mask index E - k;
+        # mm(p) = cum0[p] + (tot_i - cum_i[p + k]).
+        cum_i = cum[:, E - k, :]
+        tot_i = cum_i[:, R:R + 1]
+        cum_i_shift = cum_i[:, k:]                           # cum_i[p + k]
+        pad = jnp.zeros((cum_i.shape[0], k), jnp.int16)
+        cum_i_shift = jnp.concatenate([cum_i_shift, pad], axis=-1)
+        cand = cum0 + (tot_i - cum_i_shift)
+        interior = (p_range >= 1) & (p_range <= R - k - 1)
+        cand = jnp.where(interior[None, :], cand, BIG16)
+        if mode == "paper":
+            cand = jnp.where(cand == 0, cand, BIG16)
+        p_i = jnp.argmin(cand, axis=-1).astype(jnp.int32)
+        mm_i = jnp.take_along_axis(cand, p_i[:, None],
+                                   axis=-1)[:, 0].astype(jnp.int32)
+        score_i = scoring.match * (R - k) - m2 * mm_i - scoring.gap_cost(k)
+        score_i = jnp.where(mm_i >= BIG16, -BIG, score_i)
+        scores.append(score_i)
+        types.append(jnp.full_like(mm_i, EDIT_INS))
+        lens.append(jnp.full_like(mm_i, k))
+        poss.append(p_i)
+        mms.append(mm_i)
+
+    score_stack = jnp.stack(scores, axis=-1)  # (B, H) hypothesis scores
+    best = jnp.argmax(score_stack, axis=-1)   # first max: prefers fewer edits
+
+    def pick(xs):
+        return jnp.take_along_axis(jnp.stack(xs, -1), best[:, None], -1)[:, 0]
+
+    score = pick(scores)
+    return LightAlignResult(
+        score=score,
+        ok=score >= jnp.int32(threshold),
+        edit_type=pick(types),
+        edit_len=pick(lens),
+        edit_pos=pick(poss),
+        n_mismatch=pick(mms),
+    )
+
+
+def cigar_ops(res: LightAlignResult, read_len: int) -> jnp.ndarray:
+    """(B, 3, 2) int32 [(op, len)] runs; zero-length runs are padding.
+
+    EDIT_NONE -> [(M, R)]; EDIT_DEL k at p -> [(M, p), (D, k), (M, R-p)];
+    EDIT_INS k at p -> [(M, p), (I, k), (M, R-p-k)].
+    """
+    B = res.score.shape[0]
+    R = jnp.int32(read_len)
+    is_none = res.edit_type == EDIT_NONE
+    is_ins = res.edit_type == EDIT_INS
+    p = res.edit_pos
+    k = res.edit_len
+    len0 = jnp.where(is_none, R, p)
+    op1 = jnp.where(is_ins, CIG_I, CIG_D)
+    len1 = jnp.where(is_none, 0, k)
+    len2 = jnp.where(is_none, 0, jnp.where(is_ins, R - p - k, R - p))
+    ops = jnp.stack(
+        [
+            jnp.stack([jnp.full((B,), CIG_M, jnp.int32), len0], -1),
+            jnp.stack([op1.astype(jnp.int32), len1], -1),
+            jnp.stack([jnp.full((B,), CIG_M, jnp.int32), len2], -1),
+        ],
+        axis=1,
+    )
+    return ops
+
+
+def gather_ref_windows(
+    ref: jnp.ndarray, starts: jnp.ndarray, read_len: int, max_gap: int
+) -> jnp.ndarray:
+    """ref (L,) uint8, starts (…,) int32 -> (…, R+2E) windows.
+
+    Out-of-range bases (window beginning before 0 / past L) are fetched
+    clamped; callers must treat candidate starts near the edge carefully —
+    the simulator never places fragments in the outer E bases.
+    """
+    E = max_gap
+    idx = starts[..., None] + jnp.arange(-E, read_len + E, dtype=jnp.int32)
+    return ref[jnp.clip(idx, 0, ref.shape[0] - 1)]

@@ -1,0 +1,127 @@
+"""Long-read support (§4.7): long reads as interleaved pseudo-pairs.
+
+A long read is partitioned into `read_len`-sized segments; consecutive
+segments at distance < Δ form pseudo-pairs that go through the standard
+Partitioned Seeding / SeedMap Query / Paired-Adjacency stages.  Candidate
+locations from all pairs of one read vote on the read's mapping diagonal
+(Location Voting, [85]); the winning diagonal is aligned with full DP
+(light alignment is insufficient at long-read error rates, per the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.light_align import gather_ref_windows
+from repro.core.pair_filter import paired_adjacency_filter
+from repro.core.pipeline import PipelineConfig
+from repro.core.query import query_read_batch
+from repro.core.scoring import Scoring
+from repro.core.seeding import seed_read_batch
+from repro.core.seedmap import INVALID_LOC, SeedMap
+
+
+@dataclasses.dataclass(frozen=True)
+class LongReadConfig:
+    segment_len: int = 150
+    segment_stride: int = 300   # distance between pseudo-pair mates (< Δ)
+    pipe: PipelineConfig = PipelineConfig()
+    vote_bin: int = 64          # diagonal-vote bin width
+    dp_halo: int = 64           # DP window halo around the voted diagonal
+
+
+jax.tree_util.register_static(LongReadConfig)
+
+
+class LongReadResult(NamedTuple):
+    position: jnp.ndarray   # (B,) int32 voted read-start position
+    votes: jnp.ndarray      # (B,) int32 winning vote count
+    score: jnp.ndarray      # (B,) int32 full-DP score of segment 0 at winner
+    mapped: jnp.ndarray     # (B,) bool
+
+
+def _segments(reads: jnp.ndarray, cfg: LongReadConfig) -> jnp.ndarray:
+    """(B, L) -> (B, S, segment_len) non-overlapping stride segments."""
+    L = reads.shape[-1]
+    n_seg = (L - cfg.segment_len) // cfg.segment_stride + 1
+    idx = (
+        jnp.arange(n_seg)[:, None] * cfg.segment_stride
+        + jnp.arange(cfg.segment_len)[None, :]
+    )
+    return reads[:, idx], n_seg
+
+
+def map_long_reads(
+    sm: SeedMap, ref: jnp.ndarray, reads: jnp.ndarray,
+    cfg: LongReadConfig = LongReadConfig(),
+) -> LongReadResult:
+    """Map long reads (B, L) uint8 (already in reference orientation)."""
+    p = cfg.pipe
+    segs, n_seg = _segments(reads, cfg)           # (B, S, R)
+    B, S, R = segs.shape
+    flat = segs.reshape(B * S, R)
+    seeds = seed_read_batch(flat, p.seed_len, p.seeds_per_read,
+                            sm.config.hash_seed)
+    q = query_read_batch(sm, seeds, p.max_locs_per_seed)
+    starts = q.starts.reshape(B, S, -1)           # segment-start candidates
+
+    # Pseudo-pairs: segment i with segment i+1 (in-read distance = stride
+    # < Δ by construction); adjacency filter between consecutive segments.
+    from repro.core.query import QueryResult
+    q1 = QueryResult(starts=starts[:, :-1].reshape(B * (S - 1), -1),
+                     n_hits=jnp.zeros(B * (S - 1), jnp.int32))
+    q2 = QueryResult(starts=starts[:, 1:].reshape(B * (S - 1), -1),
+                     n_hits=jnp.zeros(B * (S - 1), jnp.int32))
+    cands = paired_adjacency_filter(
+        q1, q2, cfg.segment_stride + p.delta, p.max_candidates
+    )
+
+    # Location voting: candidate read-start diagonals (candidate - in-read
+    # segment offset), binned; the most-voted bin wins.
+    seg_off = (jnp.arange(S - 1, dtype=jnp.int32) * cfg.segment_stride)
+    pos1 = cands.pos1.reshape(B, S - 1, -1)
+    valid = pos1 != INVALID_LOC
+    diag = jnp.where(valid, pos1 - seg_off[None, :, None], INVALID_LOC)
+    diag_flat = diag.reshape(B, -1)
+    vbin = jnp.where(diag_flat == INVALID_LOC, INVALID_LOC,
+                     diag_flat // cfg.vote_bin)
+    # Vote counting without a histogram: sort bins, count run lengths.
+    sb = jnp.sort(vbin, axis=-1)
+    is_valid = sb != INVALID_LOC
+    same = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32),
+         (sb[:, 1:] == sb[:, :-1]).astype(jnp.int32)], axis=-1)
+    # run id via cumsum of run starts
+    run_start = 1 - same
+    run_id = jnp.cumsum(run_start, axis=-1) - 1
+    ones = is_valid.astype(jnp.int32)
+    M = sb.shape[-1]
+    run_len = jax.vmap(
+        lambda rid, o: jnp.zeros(M, jnp.int32).at[rid].add(o)
+    )(run_id, ones)
+    best_run = jnp.argmax(run_len, axis=-1)
+    votes = jnp.take_along_axis(run_len, best_run[:, None], -1)[:, 0]
+    # first element of the winning run
+    first_of_run = jax.vmap(
+        lambda rid, v, br: jnp.zeros(M, jnp.int32).at[rid].max(
+            jnp.where(rid == br, v, 0))
+    )(run_id, jnp.where(is_valid, sb, 0), best_run)
+    win_bin = jnp.max(first_of_run, axis=-1)
+    position = win_bin * cfg.vote_bin
+    mapped = votes > 0
+
+    # Full DP of segment 0 at the voted position (the paper DP-aligns the
+    # candidate regions; we align the anchor segment as the representative).
+    safe = jnp.where(mapped, position, 0)
+    win = gather_ref_windows(ref, safe, cfg.segment_len, cfg.dp_halo)
+    dp = gotoh_semiglobal(segs[:, 0], win, p.scoring)
+    return LongReadResult(
+        position=jnp.where(mapped, position, INVALID_LOC),
+        votes=votes,
+        score=jnp.where(mapped, dp.score, -(1 << 20)),
+        mapped=mapped,
+    )

@@ -1,0 +1,73 @@
+"""Paired-Adjacency Filtering (§4.5), TPU-native.
+
+The paper's ASIC iterates two sorted location FIFOs with a two-pointer
+merge, emitting (loc1, loc2) pairs with |loc1 - loc2| < Δ.  A sequential
+merge is the wrong shape for a 8x128-lane VPU, so we instead binary-search
+(`searchsorted`) every read-1 start against the sorted read-2 list — the
+same output set, O(M log M) fully parallel (DESIGN.md §2).
+
+Output is a fixed-capacity candidate set: valid candidates are compacted to
+the front (hardware analogue: the bounded candidate FIFO between the filter
+and the Light Alignment modules).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import QueryResult
+from repro.core.seedmap import INVALID_LOC
+
+
+class CandidateSet(NamedTuple):
+    """Candidate mapping positions for a batch of read-pairs.
+
+    pos1, pos2: (B, C) int32 read-start positions (INVALID_LOC padded)
+    n:          (B,)   int32 valid candidate count (<= C)
+    """
+
+    pos1: jnp.ndarray
+    pos2: jnp.ndarray
+    n: jnp.ndarray
+
+
+def _row_filter(starts1, starts2, delta, cap):
+    """Single read-pair filtering. starts*: (M,) sorted int32."""
+    M = starts1.shape[0]
+    valid1 = starts1 != INVALID_LOC
+    # Nearest read-2 start >= starts1 - delta.
+    lo = jnp.searchsorted(starts2, starts1 - delta, side="left")
+    lo = jnp.clip(lo, 0, M - 1)
+    s2 = starts2[lo]
+    within = (s2 != INVALID_LOC) & (jnp.abs(s2 - starts1) <= delta) & valid1
+    # Dedup: same read-start found via several seeds appears repeatedly in the
+    # sorted list; keep the first occurrence only.
+    first = jnp.concatenate(
+        [jnp.array([True]), starts1[1:] != starts1[:-1]]
+    )
+    keep = within & first
+    # Compact valid candidates to the front, preserving position order.
+    order = jnp.argsort(~keep, stable=True)
+    take = order[:cap]
+    ok = keep[take]
+    return (
+        jnp.where(ok, starts1[take], INVALID_LOC),
+        jnp.where(ok, s2[take], INVALID_LOC),
+        keep.sum().astype(jnp.int32),
+    )
+
+
+def paired_adjacency_filter(
+    q1: QueryResult, q2: QueryResult, delta: int, max_candidates: int
+) -> CandidateSet:
+    """Keep read-1/read-2 start pairs within Δ of each other.
+
+    q1, q2: merged sorted query results for read 1 and (RC'd) read 2.
+    """
+    pos1, pos2, n = jax.vmap(_row_filter, in_axes=(0, 0, None, None))(
+        q1.starts, q2.starts, jnp.int32(delta), max_candidates
+    )
+    n = jnp.minimum(n, max_candidates)
+    return CandidateSet(pos1=pos1, pos2=pos2, n=n)

@@ -1,0 +1,226 @@
+"""GenPair online pipeline (§4.1, Fig. 3): the paper's four steps end to end.
+
+  1. Partitioned Seeding   (repro.core.seeding)
+  2. SeedMap Query         (repro.core.query)
+  3. Paired-Adjacency Filtering (repro.core.pair_filter)
+  4. Light Alignment       (repro.core.light_align)
+  +  DP fallback           (repro.core.dp_fallback) for residual pairs
+
+The whole pipeline is one jit-able function over fixed-shape batches.
+Residual pairs are routed through a **fixed-capacity DP buffer**: the batch
+is compacted so only `residual_capacity_frac * B` DP alignments are
+computed — the SPMD analogue of provisioning GenDP for the average fallback
+rate (§7.4).  Overflowing pairs are flagged (hardware backpressure) rather
+than silently dropped.
+
+Method codes (MapResult.method):
+  0 UNMAPPED          no candidate and no DP capacity spent
+  1 LIGHT             mapped+aligned by Light Alignment
+  2 DP                mapped by the filter, aligned by fallback DP
+  3 RESIDUAL_FULL     no SeedMap/adjacency candidates -> full DP pipeline
+  4 DP_OVERFLOW       needed DP but the residual buffer was full
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.light_align import (
+    cigar_ops,
+    gather_ref_windows,
+    light_align,
+)
+from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.pair_filter import CandidateSet, paired_adjacency_filter
+from repro.core.query import query_read_batch
+from repro.core.scoring import Scoring
+from repro.core.seeding import seed_read_batch
+from repro.core.seedmap import INVALID_LOC, SeedMap
+
+M_UNMAPPED, M_LIGHT, M_DP, M_RESIDUAL_FULL, M_DP_OVERFLOW = 0, 1, 2, 3, 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    read_len: int = 150
+    seed_len: int = 50
+    seeds_per_read: int = 3
+    max_locs_per_seed: int = 32   # K: per-seed location cap (query gather)
+    delta: int = 500              # Paired-Adjacency threshold Δ
+    max_candidates: int = 8       # C: candidate cap after filtering
+    max_gap: int = 8              # E: Light Alignment max indel-run length
+    dp_pad: int = 16              # DP fallback window halo
+    light_mode: str = "minsplit"  # "paper" for the paper-faithful mechanism
+    accept_threshold: int | None = None  # default: perfect - 24
+    residual_capacity_frac: float = 0.25
+    scoring: Scoring = Scoring()
+    # §Perf (genpair iteration G2, beyond-paper): rank candidate pairs by
+    # their summed zero-shift Hamming distance (one XOR-compare per
+    # candidate — the paper's own exact-match-first logic) and run the
+    # full shifted-mask alignment only on the best `prescreen_top`.
+    # 0 disables (paper-faithful baseline: align every candidate).
+    prescreen_top: int = 0
+
+    def threshold(self) -> int:
+        if self.accept_threshold is not None:
+            return self.accept_threshold
+        return self.scoring.default_threshold(self.read_len)
+
+
+jax.tree_util.register_static(PipelineConfig)
+
+
+class MapResult(NamedTuple):
+    pos1: jnp.ndarray      # (B,) int32 mapped read-1 start (INVALID_LOC if not)
+    pos2: jnp.ndarray      # (B,) int32 mapped read-2 window start
+    score1: jnp.ndarray    # (B,) int32
+    score2: jnp.ndarray    # (B,) int32
+    method: jnp.ndarray    # (B,) int32 M_*
+    cigar1: jnp.ndarray    # (B, 3, 2) int32 light-align CIGAR runs (M_LIGHT)
+    cigar2: jnp.ndarray
+    had_hits: jnp.ndarray        # (B,) bool both reads had SeedMap hits
+    passed_adjacency: jnp.ndarray  # (B,) bool >=1 candidate survived Δ filter
+    light_ok: jnp.ndarray          # (B,) bool light alignment accepted
+
+
+def stage_stats(res: MapResult) -> dict:
+    """Fig. 10 quantities as fractions of the batch."""
+    B = res.method.shape[0]
+    f = lambda x: jnp.sum(x) / B
+    return {
+        "no_seed_hit": f(~res.had_hits),
+        "adjacency_fail": f(res.had_hits & ~res.passed_adjacency),
+        "light_align_fail": f(res.passed_adjacency & ~res.light_ok),
+        "light_mapped": f(res.method == M_LIGHT),
+        "dp_mapped": f(res.method == M_DP),
+        "dp_overflow": f(res.method == M_DP_OVERFLOW),
+        "residual_full_dp": f(res.method == M_RESIDUAL_FULL),
+    }
+
+
+def _best_candidate_light(
+    ref: jnp.ndarray,
+    reads: jnp.ndarray,        # (B, R) in reference orientation
+    starts: jnp.ndarray,       # (B, C) candidate read-start positions
+    cfg: PipelineConfig,
+):
+    """Light-align every candidate, return best per row."""
+    B, C = starts.shape
+    R = cfg.read_len
+    valid = starts != INVALID_LOC
+    safe = jnp.where(valid, starts, 0)
+    wins = gather_ref_windows(ref, safe, R, cfg.max_gap)  # (B, C, R+2E)
+    reads_t = jnp.broadcast_to(reads[:, None, :], (B, C, R))
+    res = light_align(
+        reads_t.reshape(B * C, R),
+        wins.reshape(B * C, -1),
+        cfg.max_gap,
+        cfg.scoring,
+        cfg.threshold(),
+        cfg.light_mode,
+    )
+    score = jnp.where(valid.reshape(-1), res.score, -(1 << 20)).reshape(B, C)
+    return res, score, valid
+
+
+class _Seeded(NamedTuple):
+    q1_starts: jnp.ndarray
+    q2_starts: jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def map_pairs(
+    sm: SeedMap,
+    ref: jnp.ndarray,
+    reads1: jnp.ndarray,
+    reads2: jnp.ndarray,
+    cfg: PipelineConfig = PipelineConfig(),
+) -> MapResult:
+    """Map a batch of FR read pairs. reads2 is as-sequenced (reverse strand)."""
+    B, R = reads1.shape
+    assert R == cfg.read_len, (R, cfg.read_len)
+    reads2_fwd = (3 - reads2)[:, ::-1]  # reference orientation (revcomp)
+
+    # -- 1. Partitioned Seeding + 2. SeedMap Query ----------------------
+    seeds1 = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                             sm.config.hash_seed)
+    seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
+                             sm.config.hash_seed)
+    q1 = query_read_batch(sm, seeds1, cfg.max_locs_per_seed)
+    q2 = query_read_batch(sm, seeds2, cfg.max_locs_per_seed)
+    had_hits = (q1.n_hits > 0) & (q2.n_hits > 0)
+
+    # -- 3. Paired-Adjacency Filtering ----------------------------------
+    cands: CandidateSet = paired_adjacency_filter(
+        q1, q2, cfg.delta, cfg.max_candidates
+    )
+    passed = cands.n > 0
+
+    # -- 4. Light Alignment over candidates ------------------------------
+    res1, sc1, v1 = _best_candidate_light(ref, reads1, cands.pos1, cfg)
+    res2, sc2, v2 = _best_candidate_light(ref, reads2_fwd, cands.pos2, cfg)
+    pair_score = sc1 + sc2
+    best = jnp.argmax(pair_score, axis=-1)  # (B,)
+    C = cfg.max_candidates
+
+    def take(x, shaped=None):
+        x = x.reshape((B, C) + x.shape[1:])
+        return jnp.take_along_axis(
+            x, best.reshape((B, 1) + (1,) * (x.ndim - 2)), axis=1
+        )[:, 0]
+
+    b_pos1 = jnp.take_along_axis(cands.pos1, best[:, None], 1)[:, 0]
+    b_pos2 = jnp.take_along_axis(cands.pos2, best[:, None], 1)[:, 0]
+    b_sc1 = jnp.take_along_axis(sc1, best[:, None], 1)[:, 0]
+    b_sc2 = jnp.take_along_axis(sc2, best[:, None], 1)[:, 0]
+    ok1 = take(res1.ok.reshape(B * C)[:, None])[:, 0] & (b_pos1 != INVALID_LOC)
+    ok2 = take(res2.ok.reshape(B * C)[:, None])[:, 0] & (b_pos2 != INVALID_LOC)
+    light_ok = passed & ok1 & ok2
+    cig1 = take(cigar_ops(res1, R))
+    cig2 = take(cigar_ops(res2, R))
+
+    # -- DP fallback on the fixed-capacity residual buffer ---------------
+    needs_dp = passed & ~light_ok
+    cap = max(1, int(round(B * cfg.residual_capacity_frac)))
+    order = jnp.argsort(~needs_dp, stable=True)
+    dp_idx = order[:cap]
+    dp_take = needs_dp[dp_idx]
+    W = R + 2 * cfg.dp_pad
+    safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC, b_pos1[dp_idx], 0)
+    safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC, b_pos2[dp_idx], 0)
+    win1 = gather_ref_windows(ref, safe1, R, cfg.dp_pad)
+    win2 = gather_ref_windows(ref, safe2, R, cfg.dp_pad)
+    dp1 = gotoh_semiglobal(reads1[dp_idx], win1, cfg.scoring)
+    dp2 = gotoh_semiglobal(reads2_fwd[dp_idx], win2, cfg.scoring)
+    dp_sc1 = jnp.full((B,), -(1 << 20), jnp.int32).at[dp_idx].set(
+        jnp.where(dp_take, dp1.score, -(1 << 20))
+    )
+    dp_sc2 = jnp.full((B,), -(1 << 20), jnp.int32).at[dp_idx].set(
+        jnp.where(dp_take, dp2.score, -(1 << 20))
+    )
+    dp_done = jnp.zeros((B,), bool).at[dp_idx].set(dp_take)
+    dp_overflow = needs_dp & ~dp_done
+
+    # -- assemble ---------------------------------------------------------
+    method = jnp.full((B,), M_UNMAPPED, jnp.int32)
+    method = jnp.where(~had_hits, M_RESIDUAL_FULL, method)
+    method = jnp.where(had_hits & ~passed, M_RESIDUAL_FULL, method)
+    method = jnp.where(light_ok, M_LIGHT, method)
+    method = jnp.where(dp_done, M_DP, method)
+    method = jnp.where(dp_overflow, M_DP_OVERFLOW, method)
+
+    mapped = light_ok | dp_done
+    pos1 = jnp.where(mapped, b_pos1, INVALID_LOC)
+    pos2 = jnp.where(mapped, b_pos2, INVALID_LOC)
+    score1 = jnp.where(light_ok, b_sc1, jnp.where(dp_done, dp_sc1, -(1 << 20)))
+    score2 = jnp.where(light_ok, b_sc2, jnp.where(dp_done, dp_sc2, -(1 << 20)))
+
+    return MapResult(
+        pos1=pos1, pos2=pos2, score1=score1, score2=score2, method=method,
+        cigar1=cig1, cigar2=cig2, had_hits=had_hits, passed_adjacency=passed,
+        light_ok=light_ok,
+    )

@@ -1,0 +1,82 @@
+"""Partitioned Seeding (§4.3): 3 non-overlapping seeds per read, 6 per pair.
+
+Seeds are the first, middle and last `seed_len` bases of each read.  Each
+seed is 2-bit packed and hashed with xxHash32 into a 32-bit value.  The
+module is pure JAX and fully batched; the Pallas kernel in
+`repro/kernels/xxhash` implements the identical hash for the throughput
+path (one hashing unit per seed, the paper's 6-way parallel module).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.encoding import pack_2bit, revcomp
+from repro.core.hashing import xxhash32_words
+
+SEED_WORDS = 4  # 50 bases -> 100 bits -> 4 zero-padded uint32 words
+
+
+class SeedSet(NamedTuple):
+    """Seeds of one read batch.
+
+    hashes:  (B, S) uint32 xxHash32 per seed
+    offsets: (S,)  int32 offset of each seed's first base within the read
+    """
+
+    hashes: jnp.ndarray
+    offsets: jnp.ndarray
+
+
+def seed_offsets(read_len: int, seed_len: int, seeds_per_read: int = 3) -> jnp.ndarray:
+    """First/middle/last non-overlapping placement (generalizes to >3)."""
+    if seeds_per_read * seed_len > read_len:
+        raise ValueError(
+            f"{seeds_per_read} seeds of {seed_len} bp do not fit a {read_len} bp read"
+        )
+    if seeds_per_read == 1:
+        return jnp.array([0], dtype=jnp.int32)
+    span = read_len - seed_len
+    return jnp.round(jnp.arange(seeds_per_read) * span / (seeds_per_read - 1)).astype(
+        jnp.int32
+    )
+
+
+def extract_seeds(reads: jnp.ndarray, seed_len: int, seeds_per_read: int = 3) -> jnp.ndarray:
+    """(B, L) uint8 -> (B, S, seed_len) uint8 seed windows."""
+    offs = seed_offsets(reads.shape[-1], seed_len, seeds_per_read)
+    idx = offs[:, None] + jnp.arange(seed_len)[None, :]  # (S, seed_len)
+    return reads[..., idx]  # (B, S, seed_len)
+
+
+def pack_seed_words(seeds: jnp.ndarray, n_words: int = SEED_WORDS) -> jnp.ndarray:
+    """(…, seed_len) uint8 -> (…, n_words) uint32, zero padded."""
+    return pack_2bit(seeds, n_words=n_words)
+
+
+def hash_seeds(seeds: jnp.ndarray, hash_seed: int = 0) -> jnp.ndarray:
+    """(…, seed_len) uint8 -> (…,) uint32."""
+    return xxhash32_words(pack_seed_words(seeds), seed=hash_seed)
+
+
+def seed_read_batch(
+    reads: jnp.ndarray,
+    seed_len: int,
+    seeds_per_read: int = 3,
+    hash_seed: int = 0,
+    reverse_complement: bool = False,
+) -> SeedSet:
+    """Partitioned Seeding for a batch of reads.
+
+    reverse_complement=True is used for read 2 of an FR pair: the read is
+    RC'd so that its seeds are in reference orientation.
+    """
+    if reverse_complement:
+        reads = revcomp(reads)
+    seeds = extract_seeds(reads, seed_len, seeds_per_read)
+    hashes = hash_seeds(seeds, hash_seed=hash_seed)
+    return SeedSet(
+        hashes=hashes,
+        offsets=seed_offsets(reads.shape[-1], seed_len, seeds_per_read),
+    )

@@ -1,0 +1,159 @@
+"""SeedMap (§4.2): the offline two-table index of the reference genome.
+
+Layout (paper-faithful CSR):
+  - Seed Table  -> `offsets`: int32[T + 1].  Bucket b's locations live at
+    `locations[offsets[b]:offsets[b+1]]`, where b = xxhash32(seed) & (T-1).
+  - Location Table -> `locations`: int32[N], reference positions, grouped by
+    bucket and sorted ascending within a bucket (the paper sorts by hash so
+    same-seed locations are contiguous; we additionally keep positions sorted
+    so the Paired-Adjacency merge gets sorted inputs for free).
+
+Index-filtering threshold (§5.2): buckets with more than `max_locations`
+entries are physically removed from the Location Table (the paper filters
+them out of SeedMap); queries to them return empty.
+
+A second, TPU-kernel-friendly layout (`PaddedSeedMap`) stores bucket-major
+fixed-width rows so the Pallas gather kernel (`kernels/seed_gather`) can
+stream whole rows HBM->VMEM with statically-shaped DMAs — the analogue of
+the paper's channel-striped NMSL layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import xxhash32_words_np
+
+INVALID_LOC = np.int32(2**31 - 1)  # sentinel: sorts after every real position
+
+
+@dataclasses.dataclass(frozen=True)
+class SeedMapConfig:
+    seed_len: int = 50
+    table_bits: int = 20          # T = 2**table_bits buckets
+    max_locations: int = 500      # index-filtering threshold (paper: 500)
+    hash_seed: int = 0
+    padded_cap: int = 32          # row width of the padded (kernel) layout
+
+    @property
+    def table_size(self) -> int:
+        return 1 << self.table_bits
+
+
+class SeedMap(NamedTuple):
+    """CSR index. Device arrays; a valid JAX pytree."""
+
+    offsets: jnp.ndarray    # int32[T + 1]
+    locations: jnp.ndarray  # int32[N]
+    config: SeedMapConfig   # static (hashable) aux data
+
+    @property
+    def n_locations(self) -> int:
+        return self.locations.shape[0]
+
+
+class PaddedSeedMap(NamedTuple):
+    """Bucket-major fixed-width layout for the TPU gather kernel."""
+
+    rows: jnp.ndarray    # int32[T, cap], INVALID_LOC-padded
+    counts: jnp.ndarray  # int32[T], min(count, cap)
+    config: SeedMapConfig
+
+
+jax.tree_util.register_static(SeedMapConfig)
+
+
+def packed_words_all_positions(ref: np.ndarray, seed_len: int) -> np.ndarray:
+    """2-bit pack the seed starting at every position: (L-seed_len+1, 4) u32.
+
+    Vectorized rolling pack: pw[k] = bases k..k+15 packed little-endian, built
+    with 16 shifted adds; word j of position p is pw[p + 16j]; the final
+    partial word packs the remaining seed_len % 16 bases.
+    """
+    ref = np.asarray(ref, dtype=np.uint32)
+    L = ref.shape[0]
+    n_pos = L - seed_len + 1
+    if n_pos <= 0:
+        raise ValueError("reference shorter than seed length")
+    n_full, rem = divmod(seed_len, 16)
+    n_words = n_full + (1 if rem else 0)
+    if n_words > 4:
+        raise ValueError("seed_len > 64 not supported (4-word hash input)")
+    # pw[k] for k in [0, L-16]
+    pw = np.zeros(L - 15, dtype=np.uint32)
+    for i in range(16):
+        pw |= ref[i : L - 15 + i] << np.uint32(2 * i)
+    words = np.zeros((n_pos, 4), dtype=np.uint32)
+    for j in range(n_full):
+        words[:, j] = pw[16 * j : 16 * j + n_pos]
+    if rem:
+        partial = np.zeros(n_pos, dtype=np.uint32)
+        base0 = 16 * n_full
+        for i in range(rem):
+            partial |= ref[base0 + i : base0 + i + n_pos] << np.uint32(2 * i)
+        words[:, n_full] = partial
+    return words
+
+
+def build_seedmap(ref: np.ndarray, config: SeedMapConfig = SeedMapConfig()) -> SeedMap:
+    """Offline SeedMap construction (§4.2, Fig. 4a). Host-side numpy.
+
+    Steps mirror the paper: (1) extract + hash all seeds, (2) sort by hash
+    bucket into the temporary seed-locations table, (3) concatenate into the
+    Location Table, (4) record per-bucket offsets in the Seed Table; then
+    apply the index-filtering threshold.
+    """
+    ref = np.asarray(ref, dtype=np.uint8)
+    words = packed_words_all_positions(ref, config.seed_len)
+    hashes = xxhash32_words_np(words, seed=config.hash_seed)
+    buckets = (hashes & np.uint32(config.table_size - 1)).astype(np.int64)
+    positions = np.arange(len(buckets), dtype=np.int32)
+    order = np.argsort(buckets, kind="stable")  # stable: positions stay sorted
+    sorted_buckets = buckets[order]
+    sorted_pos = positions[order]
+    counts = np.bincount(sorted_buckets, minlength=config.table_size)
+    # Index-filtering threshold: physically remove over-full buckets.
+    dropped = counts > config.max_locations
+    if dropped.any():
+        keep = ~dropped[sorted_buckets]
+        sorted_pos = sorted_pos[keep]
+        counts = np.where(dropped, 0, counts)
+    offsets = np.zeros(config.table_size + 1, dtype=np.int32)
+    np.cumsum(counts, out=offsets[1:])
+    return SeedMap(
+        offsets=jnp.asarray(offsets),
+        locations=jnp.asarray(sorted_pos.astype(np.int32)),
+        config=config,
+    )
+
+
+def to_padded(sm: SeedMap) -> PaddedSeedMap:
+    """CSR -> bucket-major fixed-width rows (truncating at padded_cap)."""
+    cfg = sm.config
+    offsets = np.asarray(sm.offsets)
+    locations = np.asarray(sm.locations)
+    T, cap = cfg.table_size, cfg.padded_cap
+    counts = np.minimum(offsets[1:] - offsets[:-1], cap).astype(np.int32)
+    rows = np.full((T, cap), INVALID_LOC, dtype=np.int32)
+    idx = offsets[:-1, None] + np.arange(cap)[None, :]
+    valid = np.arange(cap)[None, :] < counts[:, None]
+    rows[valid] = locations[np.minimum(idx[valid], len(locations) - 1)]
+    return PaddedSeedMap(rows=jnp.asarray(rows), counts=jnp.asarray(counts), config=cfg)
+
+
+def seedmap_stats(sm: SeedMap) -> dict:
+    """Observation-2 style stats: locations per non-empty bucket etc."""
+    offsets = np.asarray(sm.offsets)
+    counts = offsets[1:] - offsets[:-1]
+    nonzero = counts[counts > 0]
+    return {
+        "table_size": sm.config.table_size,
+        "n_locations": int(sm.locations.shape[0]),
+        "n_nonempty_buckets": int((counts > 0).sum()),
+        "mean_locs_per_nonempty_bucket": float(nonzero.mean()) if len(nonzero) else 0.0,
+        "max_locs_per_bucket": int(counts.max()) if len(counts) else 0,
+    }

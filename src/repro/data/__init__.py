@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    DataConfig, ReadStreamConfig, batch_for_step, lm_batch_for_step,
+    read_pairs_for_step,
+)
+
+__all__ = [
+    "DataConfig", "ReadStreamConfig", "batch_for_step", "lm_batch_for_step",
+    "read_pairs_for_step",
+]

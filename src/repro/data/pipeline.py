@@ -1,0 +1,117 @@
+"""Deterministic synthetic data pipeline (LM tokens + genomics read pairs).
+
+Design constraints (DESIGN.md §6, fault tolerance):
+
+* **Stateless-by-step**: `batch_for_step(step)` is a pure function of
+  (seed, step).  Restarting from a checkpoint at step k reproduces the
+  exact token stream — no iterator state to persist, no drift on restart.
+* **Host-sharded**: each process generates only its slice of the global
+  batch (`host_slice`), so the pipeline scales to thousands of hosts with
+  zero cross-host data traffic.  On this single-process CPU container the
+  slice is the whole batch.
+* **Packed documents**: the LM stream emulates document packing — documents
+  of Zipf-ish length are concatenated and cut at seq_len, with bos markers,
+  so loss masks and packing logic upstream see realistic structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    bos_id: int = 1
+    mean_doc_len: int = 512
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0, \
+            (self.global_batch, self.n_hosts)
+        return self.global_batch // self.n_hosts
+
+
+jax.tree_util.register_static(DataConfig)
+
+
+def _fold(key, *ints):
+    for i in ints:
+        key = jax.random.fold_in(key, i)
+    return key
+
+
+def lm_batch_for_step(cfg: DataConfig, step: int) -> dict:
+    """One host-local {tokens, labels} batch, deterministic in (seed, step).
+
+    Labels are next-token shifted; the final position predicts a fresh
+    sample (labels[t] = tokens[t+1]).
+    """
+    key = _fold(jax.random.PRNGKey(cfg.seed), step, cfg.host_id)
+    k_tok, k_doc = jax.random.split(key)
+    B, S = cfg.host_batch, cfg.seq_len
+    toks = jax.random.randint(k_tok, (B, S + 1), 2, cfg.vocab_size,
+                              dtype=jnp.int32)
+    # document packing: place bos at geometric(1/mean_doc_len) boundaries
+    u = jax.random.uniform(k_doc, (B, S + 1))
+    bos = u < (1.0 / cfg.mean_doc_len)
+    bos = bos.at[:, 0].set(True)
+    toks = jnp.where(bos, cfg.bos_id, toks)
+    return {"tokens": toks[:, :S], "labels": toks[:, 1:]}
+
+
+def batch_for_step(cfg: DataConfig, model_cfg: ModelConfig,
+                   step: int) -> dict:
+    """Family-aware batch: audio gets (B,S,K) codebooks, vlm gets a vision
+    prefix of precomputed patch embeddings (the modality frontend stub)."""
+    base = lm_batch_for_step(cfg, step)
+    if model_cfg.family == "audio":
+        K = model_cfg.n_codebooks
+        key = _fold(jax.random.PRNGKey(cfg.seed ^ 0x5EED), step, cfg.host_id)
+        B, S = cfg.host_batch, cfg.seq_len
+        t = jax.random.randint(key, (B, S + 1, K), 0, model_cfg.vocab_size,
+                               dtype=jnp.int32)
+        return {"tokens": t[:, :S], "labels": t[:, 1:]}
+    if model_cfg.family == "vlm":
+        key = _fold(jax.random.PRNGKey(cfg.seed ^ 0xABCD), step, cfg.host_id)
+        sv = max(4, cfg.seq_len // 4)
+        emb = jax.random.normal(
+            key, (cfg.host_batch, sv, model_cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16) * 0.02
+        st = cfg.seq_len - sv
+        return {"tokens": base["tokens"][:, :st],
+                "labels": base["labels"][:, :st],
+                "vision_embeds": emb}
+    return base
+
+
+# ------------------------------------------------------ genomics source ----
+@dataclasses.dataclass(frozen=True)
+class ReadStreamConfig:
+    """Deterministic read-pair stream over a fixed reference."""
+
+    batch: int = 4096
+    read_len: int = 150
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def read_pairs_for_step(ref: np.ndarray, cfg: ReadStreamConfig, step: int,
+                        sim_cfg=None):
+    """Simulate one batch of FR pairs keyed by (seed, step, host)."""
+    from repro.core.simulate import ReadSimConfig, simulate_pairs
+    sim_cfg = sim_cfg or ReadSimConfig(read_len=cfg.read_len)
+    # deterministic in (seed, step, host): any host can regenerate any batch
+    seed = hash((cfg.seed, step, cfg.host_id)) & 0x7FFFFFFF
+    return simulate_pairs(ref, cfg.batch, sim_cfg, seed=seed)

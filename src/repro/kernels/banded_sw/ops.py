@@ -1,0 +1,38 @@
+"""Jit'd public wrapper for the banded Gotoh DP kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dp_fallback import DPResult
+from repro.core.scoring import Scoring
+from repro.kernels.banded_sw.kernel import DEFAULT_BLOCK, banded_sw_pallas
+from repro.kernels.banded_sw.ref import gotoh_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scoring", "block", "backend"))
+def banded_sw(
+    read: jnp.ndarray,
+    win: jnp.ndarray,
+    scoring: Scoring = Scoring(),
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> DPResult:
+    """Batched semiglobal Gotoh with kernel/oracle backend switch."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return gotoh_ref(read, win, scoring)
+    B, R = read.shape
+    W = win.shape[1]
+    pad = (-B) % block
+    r32 = read.astype(jnp.int32)
+    w32 = win.astype(jnp.int32)
+    if pad:
+        r32 = jnp.concatenate([r32, jnp.zeros((pad, R), jnp.int32)], 0)
+        w32 = jnp.concatenate([w32, jnp.zeros((pad, W), jnp.int32)], 0)
+    score, end = banded_sw_pallas(
+        r32, w32, scoring, block, interpret=(backend == "interpret"))
+    return DPResult(score=score[:B], ref_end=end[:B])

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the banded_sw kernel (delegates to core)."""
+from repro.core.dp_fallback import gotoh_semiglobal as gotoh_ref  # noqa: F401

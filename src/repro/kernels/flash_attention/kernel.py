@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: causal flash attention forward (LM serving/prefill).
+
+Classic three-level grid (batch*heads, q-blocks, kv-blocks): each (bh, qi)
+output tile is revisited across kv-blocks with online-softmax state
+(running max / sum / accumulator) held in VMEM scratch.  MXU-aligned block
+sizes (multiples of 128 on the kv axis, head_dim padded to 128) are the
+caller's responsibility via ops.py.
+
+This is the optimized TPU path; the models use the pure-JAX blockwise scan
+(`ref.py` semantics) by default so the multi-pod dry-run lowers without
+Mosaic.  Causal masking is applied in-tile; fully-masked tiles are skipped
+by zeroing their contribution (correctness first — the §Perf hillclimb
+notes the skip-tile upside).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, sm_scale: float, causal: bool, block_q: int,
+                  block_k: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale  # (bq, bk)
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                   # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)          # (bq, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe_l)[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q,k,v: (BH, S, D) -> (BH, S, D).  S divisible by blocks (ops pads)."""
+    BH, S, D = q.shape
+    assert k.shape == v.shape == (BH, S, D)
+    assert S % block_q == 0 and S % block_k == 0
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    n_q = S // block_q
+    n_k = S // block_k
+    grid = (BH, n_q, n_k)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, sm_scale=sm_scale, causal=causal,
+            block_q=block_q, block_k=block_k, n_k=n_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

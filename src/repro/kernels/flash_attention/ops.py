@@ -1,0 +1,52 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "backend"),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """(BH, S, D) causal attention with kernel/oracle backend switch.
+
+    Pads S up to the block size and D is used as-is (callers pass
+    MXU-friendly dims on real hardware).
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return attention_ref(q, k, v, causal, sm_scale)
+    BH, S, D = q.shape
+    blk = max(block_q, block_k)
+    pad = (-S) % blk
+    if pad and not causal:
+        raise ValueError(
+            "flash_attention pads S only under causal masking; pad inputs "
+            "to a block multiple for causal=False")
+    if pad:
+        zp = lambda x: jnp.concatenate(
+            [x, jnp.zeros((BH, pad, D), x.dtype)], axis=1)
+        q, k, v = zp(q), zp(k), zp(v)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(backend == "interpret"),
+    )
+    return out[:, :S]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash attention."""
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, sm_scale: float | None = None):
+    """(BH, S, D) plain softmax attention in f32."""
+    BH, S, D = q.shape
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

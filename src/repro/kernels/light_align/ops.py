@@ -1,0 +1,57 @@
+"""Jit'd public wrapper for the Light Alignment kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.light_align import LightAlignResult
+from repro.core.scoring import Scoring
+from repro.kernels.light_align.kernel import DEFAULT_BLOCK, light_align_pallas
+from repro.kernels.light_align.ref import light_align_ref
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_gap", "scoring", "threshold", "mode", "block",
+                     "backend"),
+)
+def light_align(
+    read: jnp.ndarray,
+    refwin: jnp.ndarray,
+    max_gap: int,
+    scoring: Scoring = Scoring(),
+    threshold: int | None = None,
+    mode: str = "minsplit",
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> LightAlignResult:
+    """Batched Light Alignment with kernel/oracle backend switch."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return light_align_ref(read, refwin, max_gap, scoring, threshold, mode)
+    B, R = read.shape
+    if threshold is None:
+        threshold = scoring.default_threshold(R)
+    pad = (-B) % block
+    r32 = read.astype(jnp.int32)
+    w32 = refwin.astype(jnp.int32)
+    if pad:
+        r32 = jnp.concatenate([r32, jnp.zeros((pad, R), jnp.int32)], 0)
+        w32 = jnp.concatenate(
+            [w32, jnp.zeros((pad, refwin.shape[1]), jnp.int32)], 0)
+    score, etype, elen, epos, mm = light_align_pallas(
+        r32, w32, max_gap, scoring, threshold, mode, block,
+        interpret=(backend == "interpret"),
+    )
+    sl = slice(0, B)
+    return LightAlignResult(
+        score=score[sl],
+        ok=score[sl] >= jnp.int32(threshold),
+        edit_type=etype[sl],
+        edit_len=elen[sl],
+        edit_pos=epos[sl],
+        n_mismatch=mm[sl],
+    )

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the light_align kernel (delegates to core)."""
+from repro.core.light_align import light_align as light_align_ref  # noqa: F401

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: NMSL row gather (SeedMap Query inner loop, §5.2).
+
+The paper's NMSL saturates HBM by keeping every channel streaming location-
+table rows.  The TPU analogue: scalar-prefetch the bucket ids so the BlockSpec
+index_map can aim each grid step's DMA directly at the right (1, cap) row of
+the padded Location Table — Mosaic double-buffers consecutive grid steps, so
+row fetches overlap exactly like the paper's per-channel FIFOs hide latency.
+
+table: (T, cap) int32 padded rows; ids: (N,) int32 bucket per seed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, row_ref, out_ref):
+    del ids_ref  # consumed by the index_map
+    out_ref[...] = row_ref[...]
+
+
+def seed_gather_pallas(
+    table: jnp.ndarray, ids: jnp.ndarray, interpret: bool = False
+) -> jnp.ndarray:
+    """(T, cap), (N,) -> (N, cap): out[i] = table[ids[i]]."""
+    n = ids.shape[0]
+    cap = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, cap), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the NMSL row-gather kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.seed_gather.kernel import seed_gather_pallas
+from repro.kernels.seed_gather.ref import seed_gather_ref
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def seed_gather(
+    table: jnp.ndarray, ids: jnp.ndarray, backend: str = "auto"
+) -> jnp.ndarray:
+    """Row gather out[i] = table[ids[i]] with kernel/oracle backend switch."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return seed_gather_ref(table, ids)
+    shape = ids.shape
+    flat = ids.reshape(-1)
+    out = seed_gather_pallas(table, flat, interpret=(backend == "interpret"))
+    return out.reshape(shape + (table.shape[1],))

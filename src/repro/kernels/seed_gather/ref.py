@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the seed_gather kernel."""
+import jax.numpy as jnp
+
+
+def seed_gather_ref(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return table[ids]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: xxHash32 over 16-byte seeds (Partitioned Seeding unit).
+
+The paper's Partitioned Seeding module instantiates six pipelined xxHash
+units (§5.1).  On TPU the analogue is one VPU kernel hashing a whole block
+of seeds per grid step: each lane hashes one seed, so a (BLK, 4) uint32 tile
+yields BLK hashes of pure 32-bit ALU work with no memory traffic beyond the
+streamed input.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import PRIME1, PRIME2, PRIME3
+
+DEFAULT_BLOCK = 1024
+
+
+def _u32(x):
+    return jnp.uint32(x)
+
+
+def _rotl(x, r: int):
+    return (x << _u32(r)) | (x >> _u32(32 - r))
+
+
+def _round(acc, lane):
+    return _rotl(acc + lane * _u32(PRIME2), 13) * _u32(PRIME1)
+
+
+def _xxhash_kernel(words_ref, out_ref, *, seed: int):
+    w = words_ref[...]  # (BLK, 4) uint32
+    s = _u32(seed)
+    v1 = _round(s + _u32(PRIME1) + _u32(PRIME2), w[:, 0])
+    v2 = _round(s + _u32(PRIME2), w[:, 1])
+    v3 = _round(s + _u32(0), w[:, 2])
+    v4 = _round(s - _u32(PRIME1), w[:, 3])
+    acc = _rotl(v1, 1) + _rotl(v2, 7) + _rotl(v3, 12) + _rotl(v4, 18)
+    acc = acc + _u32(16)
+    acc = acc ^ (acc >> _u32(15))
+    acc = acc * _u32(PRIME2)
+    acc = acc ^ (acc >> _u32(13))
+    acc = acc * _u32(PRIME3)
+    acc = acc ^ (acc >> _u32(16))
+    out_ref[...] = acc[:, None]
+
+
+def xxhash32_pallas(
+    words: jnp.ndarray,
+    seed: int = 0,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(N, 4) uint32 -> (N,) uint32.  N must be a multiple of `block`
+    (ops.py pads)."""
+    n = words.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    out = pl.pallas_call(
+        functools.partial(_xxhash_kernel, seed=seed),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, 4), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+        interpret=interpret,
+    )(words)
+    return out[:, 0]

@@ -1,0 +1,41 @@
+"""Jit'd public wrapper for the xxhash kernel with padding + backend switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xxhash.kernel import DEFAULT_BLOCK, xxhash32_pallas
+from repro.kernels.xxhash.ref import xxhash32_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "block", "backend"))
+def xxhash32(
+    words: jnp.ndarray,
+    seed: int = 0,
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """xxHash32 of (…, 4) uint32 words.
+
+    backend: "pallas" (TPU), "interpret" (kernel body on CPU), "jnp" (oracle),
+    "auto" (pallas on TPU else jnp).
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    if backend == "jnp":
+        return xxhash32_ref(words, seed)
+    shape = words.shape[:-1]
+    flat = words.reshape(-1, 4)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, 4), flat.dtype)], axis=0)
+    out = xxhash32_pallas(flat, seed=seed, block=block,
+                          interpret=(backend == "interpret"))
+    return out[:n].reshape(shape)

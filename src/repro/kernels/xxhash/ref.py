@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the xxhash kernel (delegates to core.hashing)."""
+from repro.core.hashing import xxhash32_words
+
+
+def xxhash32_ref(words, seed: int = 0):
+    return xxhash32_words(words, seed=seed)

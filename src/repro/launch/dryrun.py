@@ -1,0 +1,577 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  This module is the ONLY place the 512-device flag
+# is set — smoke tests and benchmarks see the real device count.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Per cell, two compilation passes:
+
+  A. FULL model, scan-over-layers, blockwise attention
+     -> `memory_analysis()` (the fits-proof) and the end-to-end lowering/
+        sharding validation on the production mesh.
+
+  B. EXACT-cost passes: layer count k and 2k, layers UNROLLED, attention in
+     triangle mode, SSD chunk scan unrolled
+     -> `cost_analysis()` + HLO collective bytes are exact per layer
+        (XLA counts a while-loop body once — measured; see roofline.py),
+        so  total(L) = cost(k) + (L - k)/(2k - k) * (cost(2k) - cost(k)).
+
+Artifacts: one JSON per cell under artifacts/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --arch genpair --shape serve_256k
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.configs.registry import ARCH_NAMES, get_config
+from repro.core.genpairx_step import (
+    GenPairScale, genpair_input_specs, genpair_shardings,
+    make_genpair_serve_step,
+)
+from repro.core.pipeline import PipelineConfig
+from repro.core.seedmap import SeedMapConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (
+    decode_step, input_specs, loss_fn, model_abstract_params,
+    model_param_axes, prefill_step,
+)
+from repro.models.transformer import DecodeCache
+from repro.optim import adamw as optim
+from repro.roofline import Roofline, collective_bytes, model_flops_for, roofline
+from repro.sharding.partition import (
+    MULTIPOD_RULES, PROD_RULES, ShardCtx, ShardingRules, spec_for,
+    tree_shardings,
+)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+# --------------------------------------------------------------- helpers ---
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    fields = ["argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"]
+    out = {f: int(getattr(ma, f, 0)) for f in fields}
+    out["total_nonalias_bytes"] = (
+        out["argument_size_in_bytes"] + out["output_size_in_bytes"]
+        + out["temp_size_in_bytes"] - out["alias_size_in_bytes"])
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, rules: ShardingRules,
+                 cache_abstract: DecodeCache) -> DecodeCache:
+    """PartitionSpecs for a DecodeCache.
+
+    KV heads shard over `model` when divisible; otherwise the *sequence*
+    axis of the cache shards over `model` (flash-decode / SP — softmax
+    reductions over the sharded axis lower to psums).
+    """
+    model_size = mesh.shape[rules.tensor_axis]
+
+    def kv_spec(kv):
+        if isinstance(kv, tuple):
+            return ()  # empty subtree (attention-free arch)
+        L_, B, S, KV, hd = kv.shape
+        if KV % model_size == 0:
+            return spec_for(
+                ("layers", "batch", None, "kv_heads", None), rules,
+                kv.shape, mesh)
+        return P(None, rules.batch_axes, rules.tensor_axis, None, None)
+
+    def ssm_spec(x, axes):
+        return spec_for(axes, rules, x.shape, mesh)
+
+    from repro.models.mamba2 import MambaState
+    if not isinstance(cache_abstract.ssm, MambaState):
+        ssm = ()
+    else:
+        conv = cache_abstract.ssm.conv
+        ssm_st = cache_abstract.ssm.ssm
+        lead = ("layers",) * (conv.ndim - 3)
+        ssm = type(cache_abstract.ssm)(
+            conv=ssm_spec(conv, lead + ("batch", None, "ssm_inner")),
+            ssm=ssm_spec(ssm_st, lead + ("batch", "ssm_heads", None, None)),
+        )
+    return DecodeCache(
+        kv_k=kv_spec(cache_abstract.kv_k),
+        kv_v=kv_spec(cache_abstract.kv_v),
+        ssm=ssm,
+        length=P(),
+    )
+
+
+def _to_sharding(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_lead(mesh, rules: ShardingRules, n: int):
+    n_b = 1
+    for ax in rules.batch_axes:
+        n_b *= mesh.shape[ax]
+    return rules.batch_axes if n % n_b == 0 else None
+
+
+def batch_shardings(specs: dict, mesh, rules: ShardingRules) -> dict:
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = _to_sharding(cache_pspecs_from_abstract(v, mesh, rules),
+                                  mesh)
+        else:
+            n_b = 1
+            for ax in rules.batch_axes:
+                n_b *= mesh.shape[ax]
+            lead = rules.batch_axes if v.shape[0] % n_b == 0 else None
+            spec = P(lead, *([None] * (len(v.shape) - 1)))
+            out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+_CURRENT_CFG: ModelConfig | None = None  # set per-cell for cache specs
+
+
+def cache_pspecs_from_abstract(cache, mesh, rules):
+    return cache_pspecs(_CURRENT_CFG, mesh, rules, cache)
+
+
+def serving_cfg(cfg: ModelConfig, exact: bool) -> ModelConfig:
+    kw = dict(param_dtype="bfloat16")
+    if exact:
+        kw.update(attn_impl="triangle", unroll_scans=True)
+    return dataclasses.replace(cfg, **kw)
+
+
+def training_cfg(cfg: ModelConfig, exact: bool,
+                 shape: ShapeConfig) -> ModelConfig:
+    kw = {}
+    if exact:
+        kw.update(attn_impl="triangle", unroll_scans=True)
+    if shape.seq_len >= 32768:
+        kw.update(attn_block_q=4096, attn_block_k=4096)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def with_layers(cfg: ModelConfig, k: int) -> ModelConfig:
+    """k layer-units: plain layers, or k groups for hybrid."""
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=k * cfg.attn_every)
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+def layer_units(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return cfg.n_layers
+
+
+def opt_config_for(cfg: ModelConfig) -> optim.OptConfig:
+    if cfg.name.startswith("kimi"):
+        return optim.OptConfig(kind="adafactor")
+    return optim.OptConfig(kind="adamw")
+
+
+def seq_exact_points(cfg: ModelConfig, shape: ShapeConfig):
+    """Reduced-S compile points for train/prefill exact passes.
+
+    Two compile-cost pathologies force extrapolation over S instead of
+    direct compilation:
+      - ssm/hybrid: exact costs need the SSD chunk scan *unrolled*
+        (cost_analysis counts scan bodies once) — thousands of bodies at
+        S=32k;
+      - attention archs: exact costs use triangle (dense SxS) attention —
+        the SxS buffers at S=32k make partitioning/compile minutes-long
+        per pass.
+    Costs are polynomial in S with a known exact basis ({1,S} attention-
+    free, {1,S,S2} with any attention), so compile len(basis) small-S
+    points and extrapolate (with a monotone guard, see _extrap).
+    """
+    if shape.kind == "decode":
+        return None
+    if cfg.family == "ssm":
+        n_basis, need = 2, (3 * shape.seq_len // cfg.ssm_chunk) > 600
+    elif cfg.family == "hybrid":
+        n_basis = 3
+        need = (3 * cfg.attn_every * shape.seq_len // cfg.ssm_chunk) > 600
+    else:
+        n_basis, need = 3, shape.seq_len > 4096
+    if not need:
+        return None
+    return [512 * (2 ** i) for i in range(n_basis)]
+
+
+def _scale_cfg_for_seq(cfg: ModelConfig, s_val: int,
+                       s_target: int) -> ModelConfig:
+    """Keep S-dependent config knobs in the same regime at reduced S.
+
+    vlm: the vision prefix is min(vision_tokens, S//4); scale the token
+    budget with S so both compile points and target sit on the same side
+    of the min() (the basis would otherwise kink).
+    """
+    if cfg.family != "vlm":
+        return cfg
+    vt_eff = min(cfg.vision_tokens, s_target // 4)
+    vt = max(4, vt_eff * s_val // s_target)
+    return dataclasses.replace(cfg, vision_tokens=vt)
+
+
+def exact_costs_at(exact_cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   rules: ShardingRules, moe_groups: int, k: int) -> dict:
+    """Compile unrolled k- and 2k-layer-unit models; exact cost dicts."""
+    costs = {}
+    for kk in (k, 2 * k):
+        c_cfg = with_layers(exact_cfg, kk)
+        low_k, _ = lower_cell(c_cfg, shape, mesh, rules, unroll=True,
+                              moe_groups=moe_groups)
+        comp_k = low_k.compile()
+        ca = comp_k.cost_analysis()
+        ck = collective_bytes(comp_k.as_text())
+        costs[kk] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(ck.total_bytes),
+            "coll_by_kind": ck.bytes_by_kind,
+        }
+    return costs
+
+
+def combine_layers(costs: dict, k: int, L: int):
+    """(totals, coll_kinds) for L layer-units from k/2k-unit compiles."""
+    per = {m: (costs[2 * k][m] - costs[k][m]) / k
+           for m in ("flops", "bytes", "coll")}
+    total = {m: costs[k][m] + per[m] * (L - k)
+             for m in ("flops", "bytes", "coll")}
+    coll_kinds = {
+        kind: costs[k]["coll_by_kind"].get(kind, 0)
+        + (costs[2 * k]["coll_by_kind"].get(kind, 0)
+           - costs[k]["coll_by_kind"].get(kind, 0)) * (L - k)
+        for kind in set(costs[k]["coll_by_kind"])
+        | set(costs[2 * k]["coll_by_kind"])}
+    return total, coll_kinds
+
+
+# ---------------------------------------------------------- cell lowering --
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               rules: ShardingRules, unroll: bool, moe_groups: int):
+    """Lower one cell; returns (lowered, n_chips)."""
+    global _CURRENT_CFG
+    _CURRENT_CFG = cfg
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    specs = input_specs(cfg, shape)
+    bsh = batch_shardings(specs, mesh, rules)
+    params_abs = model_abstract_params(cfg)
+    axes = model_param_axes(cfg)
+    psh = tree_shardings(mesh, axes, params_abs, rules)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        opt_abs = jax.eval_shape(
+            lambda p: optim.init(p, opt_cfg), params_abs)
+        osh = optim.opt_state_sharding(psh, params_abs, opt_cfg, repl)
+
+        def train_step(params, opt_state, batch):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, ctx, unroll=unroll),
+                has_aux=True)(params)
+            new_p, new_o = optim.update(grads, opt_state, params, opt_cfg)
+            return new_p, new_o, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, repl),
+            donate_argnums=(0, 1),
+        )
+        return fn.lower(params_abs, opt_abs, specs), mesh.devices.size
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return prefill_step(params, batch, cfg, max_len=shape.seq_len,
+                                ctx=ctx, unroll=unroll)
+        cache_abs = jax.eval_shape(step, params_abs, specs)[1]
+        csh = _to_sharding(cache_pspecs(cfg, mesh, rules, cache_abs), mesh)
+        logits_sh = NamedSharding(
+            mesh, P(_batch_lead(mesh, rules, shape.global_batch), None))
+        fn = jax.jit(step, in_shardings=(psh, bsh),
+                     out_shardings=(logits_sh, csh))
+        return fn.lower(params_abs, specs), mesh.devices.size
+
+    # decode
+    def step(params, cache, tokens):
+        return decode_step(params, cache, tokens, cfg, ctx=ctx,
+                           unroll=unroll)
+
+    cache_abs = specs["cache"]
+    csh = _to_sharding(cache_pspecs(cfg, mesh, rules, cache_abs), mesh)
+    tok_sh = bsh["tokens"]
+    logits_sh = NamedSharding(
+        mesh, P(_batch_lead(mesh, rules, shape.global_batch), None))
+    fn = jax.jit(step, in_shardings=(psh, csh, tok_sh),
+                 out_shardings=(logits_sh, csh), donate_argnums=(1,))
+    return fn.lower(params_abs, cache_abs, specs["tokens"]), \
+        mesh.devices.size
+
+
+def lower_genpair(mesh, rules: ShardingRules,
+                  pipe: PipelineConfig | None = None):
+    scale = GenPairScale()
+    pipe = pipe or PipelineConfig()
+    sm_cfg = SeedMapConfig(table_bits=scale.table_bits)
+    n_model = mesh.shape[rules.tensor_axis]
+    specs = genpair_input_specs(scale, n_model)
+    shard = genpair_shardings(mesh, rules.batch_axes, rules.tensor_axis)
+    step = make_genpair_serve_step(mesh, pipe, sm_cfg, rules.batch_axes,
+                                   rules.tensor_axis)
+    out_sh = NamedSharding(mesh, P(rules.batch_axes))
+    fn = jax.jit(
+        step,
+        in_shardings=tuple(shard[k] for k in
+                           ("offsets", "locations", "ref_words",
+                            "reads1", "reads2")),
+        out_shardings=jax.tree.map(lambda _: out_sh, jax.eval_shape(
+            step, *(specs[k] for k in ("offsets", "locations", "ref_words",
+                                       "reads1", "reads2")))),
+    )
+    return fn.lower(*(specs[k] for k in
+                      ("offsets", "locations", "ref_words", "reads1",
+                       "reads2"))), mesh.devices.size
+
+
+# -------------------------------------------------------------- run cell ---
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: ShardingRules | None = None, moe_groups: int = 32,
+             exact: bool = True, out_dir: str | None = None,
+             variant: str = "",
+             genpair_cfg: PipelineConfig | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if rules is None:
+        rules = MULTIPOD_RULES if multi_pod else PROD_RULES
+        # SPerf (llama4 prefill iteration 1): Megatron-SP on the residual
+        # stream causes per-layer all-gather/all-reduce bouncing in
+        # *serving* cells of attention/MoE archs (49.1 s -> ~0 collective
+        # term on llama4 prefill_32k).  ssm/hybrid keep SP — their f32 SSD
+        # intermediates want the sequence sharding (zamba2 sp_off measured
+        # +56 % memory).  Training keeps SP for remat-saved residuals.
+        if arch != "genpair":
+            cfg_peek = get_config(arch)
+            if SHAPES[shape_name].kind != "train" \
+                    and cfg_peek.family not in ("ssm", "hybrid"):
+                rules = dataclasses.replace(rules, act_seq_axis=None)
+    mesh_name = "multipod_512" if multi_pod else "pod_256"
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_chips": int(mesh.devices.size), "variant": variant}
+
+    if arch == "genpair":
+        lowered, n_chips = lower_genpair(mesh, rules, pipe=genpair_cfg)
+        compiled = lowered.compile()
+        result["compile_s"] = {"full": time.time() - t0}
+        result["memory"] = _mem_dict(compiled)
+        ca = compiled.cost_analysis()
+        text = compiled.as_text()
+        coll = collective_bytes(text)
+        rf = roofline(compiled, n_chips, model_flops=0.0, hlo_text=text)
+        result["roofline"] = rf.as_dict()
+        result["collectives"] = {"bytes": coll.bytes_by_kind,
+                                 "counts": coll.count_by_kind}
+        _write(result, out_dir)
+        return result
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        result["skipped"] = "long_500k requires sub-quadratic arch"
+        _write(result, out_dir)
+        return result
+    base_cfg = (training_cfg(cfg, False, shape) if shape.kind == "train"
+                else serving_cfg(cfg, False))
+
+    # ---- pass A: full model, scan, memory analysis ----------------------
+    tA = time.time()
+    lowered, n_chips = lower_cell(base_cfg, shape, mesh, rules,
+                                  unroll=False, moe_groups=moe_groups)
+    compiled = lowered.compile()
+    mem = _mem_dict(compiled)
+    text = compiled.as_text()
+    coll_A = collective_bytes(text)
+    ca_A = compiled.cost_analysis()
+    compile_A = time.time() - tA
+    result["memory"] = mem
+    result["collectives_scan_pass"] = {"bytes": coll_A.bytes_by_kind,
+                                       "counts": coll_A.count_by_kind}
+
+    mf = model_flops_for(cfg, shape)
+    if not exact:
+        rf = roofline(compiled, n_chips, mf, hlo_text=text)
+        result["roofline"] = rf.as_dict()
+        result["compile_s"] = {"full_scan": compile_A}
+        _write(result, out_dir)
+        return result
+
+    # ---- pass B/C: exact per-layer extrapolation -------------------------
+    exact_cfg = (training_cfg(cfg, True, shape) if shape.kind == "train"
+                 else serving_cfg(cfg, True))
+    k = 1
+    tB = time.time()
+    s_pts = seq_exact_points(cfg, shape)
+    if s_pts is None:
+        costs = exact_costs_at(exact_cfg, shape, mesh, rules, moe_groups, k)
+        total, coll_kinds = combine_layers(costs, k, layer_units(cfg))
+    else:
+        # SSD chunk scans must be unrolled for exact costs, but at S=32k
+        # that is thousands of unrolled bodies (hours of compile).  Costs
+        # are polynomial in S with a known basis — {1,S} for pure SSM,
+        # {1,S,S2} with exact triangle attention for hybrids — so compile
+        # len(basis) reduced-S points and solve the Vandermonde system.
+        import numpy as _np
+        per_s = []
+        for s_val in s_pts:
+            sh_s = dataclasses.replace(shape, seq_len=s_val)
+            c_cfg = _scale_cfg_for_seq(exact_cfg, s_val, shape.seq_len)
+            costs = exact_costs_at(c_cfg, sh_s, mesh, rules,
+                                   moe_groups, k)
+            per_s.append(combine_layers(costs, k, layer_units(cfg)))
+        V = _np.vander(_np.array(s_pts, float), N=len(s_pts),
+                       increasing=True)
+        St = float(shape.seq_len)
+        basis_t = _np.array([St ** i for i in range(len(s_pts))])
+
+        def _extrap(vals):
+            """Polynomial fit with a monotonicity guard.
+
+            XLA fusion decisions can differ slightly across S points, so
+            the fitted quadratic occasionally bends negative when pushed
+            16x out.  Costs are non-decreasing in S, so fall back to
+            linear extrapolation from the last two points whenever the
+            fit dips below the largest measured value.
+            """
+            coef = _np.linalg.solve(V, _np.asarray(vals, float))
+            fit = float(coef @ basis_t)
+            s1, s2 = s_pts[-2], s_pts[-1]
+            lin = vals[-1] + (vals[-1] - vals[-2]) / (s2 - s1) * (St - s2)
+            out = fit if fit >= vals[-1] else float(max(lin, vals[-1]))
+            return max(out, 0.0)  # layer-delta noise can push tiny terms <0
+
+        total = {m: _extrap([p[0][m] for p in per_s])
+                 for m in ("flops", "bytes", "coll")}
+        kinds = set()
+        for p in per_s:
+            kinds |= set(p[1])
+        coll_kinds = {
+            kind: _extrap([p[1].get(kind, 0.0) for p in per_s])
+            for kind in kinds}
+        costs = {"seq_points": s_pts,
+                 "per_s_totals": [p[0] for p in per_s]}
+    compile_B = time.time() - tB
+    L = layer_units(cfg)
+
+    from repro import roofline as RF
+    c = total["flops"] / RF.PEAK_FLOPS
+    m_t = total["bytes"] / RF.HBM_BW
+    kk_t = total["coll"] / RF.ICI_BW
+    terms = {"compute": c, "memory": m_t, "collective": kk_t}
+    bott = max(terms, key=terms.get)
+    rf = Roofline(
+        flops=total["flops"], hbm_bytes=total["bytes"],
+        coll_bytes=total["coll"], compute_s=c, memory_s=m_t,
+        collective_s=kk_t, bottleneck=bott, model_flops=mf,
+        useful_ratio=(mf / (total["flops"] * n_chips)
+                      if total["flops"] else 0.0),
+        n_chips=n_chips)
+    result["roofline"] = rf.as_dict()
+    result["collectives"] = {"bytes": coll_kinds}
+    result["extrapolation"] = {"k": k, "costs": costs,
+                               "layer_units": L}
+    result["compile_s"] = {"full_scan": compile_A, "exact_passes": compile_B}
+    _write(result, out_dir)
+    return result
+
+
+def _write(result: dict, out_dir: str | None):
+    out_dir = out_dir or ARTIFACT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}"
+    if result.get("variant"):
+        name += f"__{result['variant']}"
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    rl = result.get("roofline", {})
+    print(f"[dryrun] {name}: bottleneck={rl.get('bottleneck', '-')} "
+          f"compute={rl.get('compute_s', 0):.4g}s "
+          f"memory={rl.get('memory_s', 0):.4g}s "
+          f"coll={rl.get('collective_s', 0):.4g}s "
+          f"mem_total={result.get('memory', {}).get('total_nonalias_bytes', 0)/2**30:.2f}GiB",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch name or 'genpair'")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-exact", action="store_true",
+                    help="skip the exact extrapolation passes")
+    ap.add_argument("--moe-groups", type=int, default=32)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose artifact JSON already exists")
+    ap.add_argument("--budget-s", type=float, default=0,
+                    help="stop starting new cells after this many seconds")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_NAMES
+                 for s in ("train_4k", "prefill_32k", "decode_32k",
+                           "long_500k")]
+        cells.append(("genpair", "serve_256k"))
+    else:
+        cells = [(args.arch, args.shape)]
+    mesh_name = "multipod_512" if args.multi_pod else "pod_256"
+    out_dir = args.out or ARTIFACT_DIR
+    t_start = time.time()
+    remaining = 0
+    for arch, shape in cells:
+        name = f"{arch}__{shape}__{mesh_name}"
+        if args.variant:
+            name += f"__{args.variant}"
+        if args.skip_existing and os.path.exists(
+                os.path.join(out_dir, name + ".json")):
+            continue
+        if args.budget_s and time.time() - t_start > args.budget_s:
+            remaining += 1
+            continue
+        try:
+            run_cell(arch, shape, args.multi_pod,
+                     moe_groups=args.moe_groups, exact=not args.no_exact,
+                     out_dir=args.out, variant=args.variant)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"[dryrun] FAILED {arch} {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+            if not args.all:
+                raise
+    if remaining:
+        print(f"[dryrun] budget exhausted; {remaining} cells remaining "
+              f"(re-run with --skip-existing to resume)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md roofline table.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir artifacts/dryrun]
+
+Emits a markdown table per mesh: one row per (arch, shape) with the three
+roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness
+ratio, and per-device memory.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def load_cells(d: str) -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(cells: list[dict], mesh: str) -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | bottleneck "
+        "| useful (6ND/HLO) | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh or c.get("variant"):
+            continue
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped: {c['skipped']} | — | — |")
+            continue
+        r = c.get("roofline", {})
+        mem = c.get("memory", {}).get("total_nonalias_bytes", 0) / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r.get('compute_s', 0))} "
+            f"| {fmt_s(r.get('memory_s', 0))} "
+            f"| {fmt_s(r.get('collective_s', 0))} "
+            f"| **{r.get('bottleneck', '?')}** "
+            f"| {r.get('useful_ratio', 0):.2f} | {mem:.2f} |")
+    return "\n".join(rows)
+
+
+def multipod_table(cells: list[dict]) -> str:
+    """Multi-pod cells compile pass A only (--no-exact): scan bodies are
+    counted once, so roofline terms would mislead.  The table shows what
+    the multi-pod pass proves: the cell lowers+compiles on the
+    (pod, data, model) mesh, fits, and which collective kinds the
+    partitioner emitted (the pod axis shards)."""
+    rows = [
+        "| arch | shape | GiB/dev | collective kinds in partitioned HLO |",
+        "|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != "multipod_512" or c.get("variant"):
+            continue
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | skipped: "
+                        f"{c['skipped']} |")
+            continue
+        mem = c.get("memory", {}).get("total_nonalias_bytes", 0) / 2**30
+        coll = (c.get("collectives") or
+                c.get("collectives_scan_pass", {})).get("bytes", {})
+        kinds = ", ".join(sorted(k for k, v in coll.items() if v)) or "none"
+        rows.append(f"| {c['arch']} | {c['shape']} | {mem:.2f} | {kinds} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    n = sum(1 for c in cells if c.get("mesh") == "pod_256"
+            and not c.get("variant"))
+    if n:
+        print(f"\n### Mesh pod_256 — roofline baselines ({n} cells)\n")
+        print(table(cells, "pod_256"))
+    n = sum(1 for c in cells if c.get("mesh") == "multipod_512"
+            and not c.get("variant"))
+    if n:
+        print(f"\n### Mesh multipod_512 — sharding/fits proof "
+              f"({n} cells)\n")
+        print(multipod_table(cells))
+
+
+if __name__ == "__main__":
+    main()

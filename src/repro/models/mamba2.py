@@ -1,0 +1,222 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked scan formulation.
+
+Implements the SSD algorithm of Mamba2 (arXiv:2405.21060): within a chunk
+the recurrence is computed as masked matmuls (MXU-friendly "attention
+duality"); across chunks a lax.scan carries the (H, P, N) state.  Scalar-
+per-head decay a_t = exp(-softplus(dt) * exp(A_log)), B/C shared across
+heads (single group), depthwise causal conv on x/B/C as in the reference
+implementation.
+
+Decode keeps (conv window, SSM state) per layer — O(1) per token, which is
+what makes long_500k decode run at all (DESIGN.md §5).
+
+Reference oracle: `ssd_reference` (naive sequential recurrence) — property
+tests assert the chunked path matches it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.template import Leaf
+from repro.sharding.partition import ShardCtx, constrain
+
+
+def mamba_template(cfg: ModelConfig, stacked: tuple = ()) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    st = stacked
+    sta = tuple("layers" for _ in stacked)
+    conv_dim = di + 2 * N
+    return {
+        "w_in": Leaf(st + (d, 2 * di + 2 * N + H), sta + ("embed", "ssm_inner")),
+        "conv_w": Leaf(st + (K, conv_dim), sta + ("conv", "ssm_inner"),
+                       init="normal", scale=0.5),
+        "conv_b": Leaf(st + (conv_dim,), sta + ("ssm_inner",), init="zeros"),
+        "A_log": Leaf(st + (H,), sta + ("ssm_heads",), init="zeros"),
+        "dt_bias": Leaf(st + (H,), sta + ("ssm_heads",), init="zeros"),
+        "D": Leaf(st + (H,), sta + ("ssm_heads",), init="ones"),
+        "norm": Leaf(st + (di,), sta + ("ssm_inner",), init="ones"),
+        "w_out": Leaf(st + (di, d), sta + ("ssm_inner", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # (B, K-1, conv_dim) last inputs of the conv window
+    ssm: jnp.ndarray   # (B, H, P, N) recurrent state (f32)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev=None):
+    """Depthwise causal conv1d.  xbc: (B, S, C); conv_w: (K, C).
+
+    prev: (B, K-1, C) left context (decode);  returns (out, new_prev).
+    """
+    B, S, C = xbc.shape
+    K = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, C), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)  # (B, S+K-1, C)
+    out = jnp.zeros((B, S, C), xbc.dtype)
+    for i in range(K):  # K is tiny (4): static unroll
+        out = out + xp[:, i : i + S] * conv_w[i]
+    out = jax.nn.silu(out + conv_b)
+    return out, xp[:, -(K - 1):]
+
+
+def ssd_chunked(x, dt, A, B_, C, chunk: int, state0=None,
+                unroll: bool = False, ctx: ShardCtx | None = None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P) inputs per head
+    dt: (B, S, H)    softplus-ed timestep (>0)
+    A:  (H,)         negative decay rate (A = -exp(A_log))
+    B_: (B, S, N)    input projection (single group, shared across heads)
+    C:  (B, S, N)    output projection
+    Returns y (B, S, H, P), final state (B, H, P, N).
+
+    Recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T;  y_t = C_t h_t.
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = B_.reshape(Bb, nc, Q, N)
+    Cc = C.reshape(Bb, nc, Q, N)
+
+    la = dtc * A[None, None, None, :]          # log decay per step (B,nc,Q,H)
+    cum = jnp.cumsum(la, axis=2)               # within-chunk cumulative logs
+
+    # --- intra-chunk (dual/attention form) ---------------------------------
+    # M[t,s] = exp(cum[t] - cum[s]) for t >= s else 0.
+    # (B, nc, Q, Q, H) is the SSD working set; sharded over batch (data)
+    # and heads (model) it is the per-device memory hot spot (DESIGN.md §5).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qt,Qs,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    if ctx is not None:
+        Lmat = constrain(Lmat, ctx, "batch", None, None, None, "ssm_heads")
+    # scores G[t,s] = C_t . B_s  (shared across heads)
+    G = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)
+    W = G[..., None] * Lmat                                # (B,nc,Q,Q,H)
+    xdt = xc * dtc[..., None]                              # dt-weighted input
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", W, xdt)
+
+    # --- chunk states -------------------------------------------------------
+    # state contribution of chunk: sum_s exp(cum[Q-1]-cum[s]) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    SB = jnp.einsum("bcsh,bcsn,bcshp->bchpn",
+                    decay_to_end * dtc, Bc, xc)            # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def chunk_step(h, ins):
+        sb, dec = ins  # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + sb
+        return h_new, h  # emit state *before* this chunk
+
+    h0 = state0 if state0 is not None else jnp.zeros(
+        (Bb, H, P, N), jnp.float32)
+    sb_scan = jnp.moveaxis(SB, 1, 0)
+    dec_scan = jnp.moveaxis(chunk_decay, 1, 0)
+    if unroll:  # dry-run mode: exact cost_analysis (scan bodies count once)
+        h = h0
+        hp = []
+        for c in range(nc):
+            h, prev = chunk_step(h, (sb_scan[c], dec_scan[c]))
+            hp.append(prev)
+        h_final, h_prevs = h, jnp.stack(hp)
+    else:
+        h_final, h_prevs = jax.lax.scan(chunk_step, h0, (sb_scan, dec_scan))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,P,N)
+
+    # --- inter-chunk --------------------------------------------------------
+    # y_inter[t] = exp(cum[t]) * C_t @ h_prev
+    decay_from_start = jnp.exp(cum)                        # (B,nc,Q,H)
+    y_inter = jnp.einsum("bctn,bchpn->bcthp", Cc, h_prevs) \
+        * decay_from_start[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, h_final
+
+
+def ssd_reference(x, dt, A, B_, C, state0=None):
+    """Naive sequential recurrence (oracle for tests)."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    h = state0 if state0 is not None else jnp.zeros((Bb, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        a = jnp.exp(dt[:, t] * A[None, :])                  # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B_[:, t])
+        h = h * a[:, :, None, None] + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t], h))
+    return jnp.stack(ys, axis=1), h
+
+
+def mamba_forward(p, x, cfg: ModelConfig, ctx: ShardCtx,
+                  state: MambaState | None = None):
+    """Mamba2 block.  x: (B, S, d).  state!=None -> stateful (decode).
+
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt_))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    prev = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(dt_),
+                                 p["conv_b"].astype(dt_), prev)
+    xin = xbc[..., :di]
+    B_ = xbc[..., di : di + N].astype(jnp.float32)
+    C = xbc[..., di + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, P).astype(jnp.float32)
+    xh = constrain(xh, ctx, "batch", None, "ssm_heads", None)
+
+    state0 = state.ssm if state is not None else None
+    if S == 1 and state is not None:
+        # O(1) decode recurrence
+        a = jnp.exp(dt[:, 0] * A[None, :])
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], B_[:, 0])
+        h = state0 * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0], h)[:, None]
+        h_final = h
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, B_, C, cfg.ssm_chunk, state0,
+                                 unroll=cfg.unroll_scans, ctx=ctx)
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(dt_)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"].astype(dt_), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    new_state = MambaState(conv=new_conv, ssm=h_final)
+    return constrain(out, ctx, "batch", None, None), new_state

@@ -1,0 +1,220 @@
+"""Public model API: losses, prefill/decode steps, input specs.
+
+`input_specs(cfg, shape)` produces ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) cell — weak-type-correct, shardable, no
+device allocation — exactly what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.template import abstract_params, axes_tree, init_params
+from repro.models.transformer import (
+    DecodeCache, forward, init_cache, model_template,
+)
+from repro.sharding.partition import ShardCtx
+
+MOE_AUX_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-3
+
+
+# ------------------------------------------------------------- params ------
+def model_abstract_params(cfg: ModelConfig):
+    return abstract_params(model_template(cfg), cfg.param_dtype)
+
+
+def model_param_axes(cfg: ModelConfig):
+    return axes_tree(model_template(cfg))
+
+
+def model_init_params(cfg: ModelConfig, key):
+    return init_params(model_template(cfg), key, cfg.param_dtype)
+
+
+# --------------------------------------------------------------- loss ------
+def cross_entropy(logits, labels, mask):
+    """logits (..., V) f32, labels (...) int32, mask (...) bool.
+
+    The label logit is extracted with an iota-compare select-reduce (not
+    take_along_axis) so a vocab-sharded logits tensor never re-replicates
+    under GSPMD — the reduction over V lowers to a psum on the TP axis.
+    §Perf note: an earlier one-hot *dot* formulation materialized a
+    (B, S, V) f32 one-hot operand (dots don't fuse their inputs);
+    at kimi/qwen vocab sizes that is a ~2.7 TB global temp.  The
+    elementwise compare+select chain fuses into the reduce — zero extra
+    bytes (EXPERIMENTS.md §Perf, kimi train_4k iteration 1).
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                    logits.ndim - 1)
+    picked = jnp.where(iota == labels[..., None], logits, 0)
+    ll = jnp.sum(picked, axis=-1)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def chunked_xent(params, x, labels, cfg: ModelConfig, ctx: ShardCtx,
+                 unroll: bool = False, n_chunks: int = 8):
+    """Head projection + cross-entropy in sequence chunks (§Perf, kimi
+    iteration 3).
+
+    At 150k+ vocabs the (B, S, V) f32 logits pipeline is the largest
+    training activation (fwd lse + bwd softmax each hold several copies).
+    Chunking S and checkpointing the body keeps one (B, S/nc, V_shard)
+    f32 block live at a time; backward recomputes the chunk's logits.
+    """
+    from repro.models.transformer import _logits
+    from repro.sharding.partition import constrain
+
+    B, S, d = x.shape
+    nc = n_chunks
+    while S % nc:
+        nc -= 1
+    xs = jnp.moveaxis(x.reshape(B, nc, S // nc, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, S // nc), 1, 0)
+
+    def body(carry, xc_lc):
+        xc, lc = xc_lc
+        logits = _logits(params, cfg, xc)
+        logits = constrain(logits, ctx, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        ll = jnp.sum(jnp.where(iota == lc[..., None], logits, 0), axis=-1)
+        return carry + jnp.sum(lse - ll), None
+
+    if unroll:  # dry-run exact passes: scan bodies are cost-counted once
+        tot = jnp.float32(0)
+        for i in range(nc):
+            tot, _ = body(tot, (xs[i], ls[i]))
+    else:
+        tot, _ = jax.lax.scan(jax.checkpoint(body), jnp.float32(0),
+                              (xs, ls))
+    return tot / (B * S)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ShardCtx = ShardCtx(),
+            unroll: bool = False):
+    labels = batch["labels"]
+    if cfg.family == "audio":
+        # (B, S, K, V) with a small vocab (2048): plain path
+        logits, aux = forward(params, cfg, batch, ctx, unroll=unroll)
+        mask = jnp.ones(labels.shape, bool)
+        loss = cross_entropy(logits, labels, mask)
+    else:
+        x, aux = forward(params, cfg, batch, ctx, unroll=unroll,
+                         return_hidden=True)
+        if cfg.family == "vlm":
+            # loss only over text positions (vision prefix is input-only)
+            x = x[:, -labels.shape[1]:]
+        loss = chunked_xent(params, x, labels, cfg, ctx, unroll=unroll)
+    if cfg.family == "moe":
+        loss = loss + MOE_AUX_WEIGHT * aux["balance_loss"] \
+            + Z_LOSS_WEIGHT * aux["z_loss"]
+    return loss, {"loss": loss}
+
+
+# ------------------------------------------------------------ serving ------
+def prefill_step(params, batch, cfg: ModelConfig, max_len: int,
+                 ctx: ShardCtx = ShardCtx(), unroll: bool = False,
+                 cache_dtype=jnp.bfloat16):
+    """Full-sequence prefill that fills a fresh KV/SSM cache.
+
+    Runs the cacheless blockwise forward (no SxS, no S x max_len scores),
+    collects the per-layer KV / final SSM states, and pads the KV into
+    max_len decode buffers.  Returns (last_token_logits, cache).
+    """
+    logits, _, c = forward(
+        params, cfg, batch, ctx, return_cache=True, unroll=unroll)
+
+    def pad_kv(kv):
+        if isinstance(kv, tuple):  # empty-tuple sentinel (no KV for SSM)
+            return ()
+        Ls, B, S, KV, hd = kv.shape
+        buf = jnp.zeros((Ls, B, max_len, KV, hd), cache_dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, kv.astype(cache_dtype), 0, axis=2)
+
+    cache = DecodeCache(pad_kv(c.kv_k), pad_kv(c.kv_v), c.ssm, c.length)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache: DecodeCache, tokens, cfg: ModelConfig,
+                ctx: ShardCtx = ShardCtx(), unroll: bool = False):
+    """One-token decode against an existing cache.
+
+    tokens: (B, 1) (or (B, 1, K) for audio).  Returns (logits, new_cache).
+    """
+    logits, _, new_cache = forward(
+        params, cfg, {"tokens": tokens}, ctx, cache=cache, unroll=unroll)
+    return logits[:, -1], new_cache
+
+
+# -------------------------------------------------------- input specs ------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train  : {tokens, labels}            -> lowers train_step
+    prefill: {tokens}                    -> lowers prefill_step
+    decode : {tokens, cache}             -> lowers decode_step (serve_step);
+             the cache spec is seq_len long (decoding token seq_len+1).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            toks = jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32)
+            return {"tokens": toks, "labels": toks}
+        if cfg.family == "vlm":
+            sv = min(cfg.vision_tokens, S // 4)
+            st = S - sv
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, st), i32),
+                "labels": jax.ShapeDtypeStruct((B, st), i32),
+                "vision_embeds": jax.ShapeDtypeStruct(
+                    (B, sv, cfg.d_model), jnp.bfloat16),
+            }
+        t = jax.ShapeDtypeStruct((B, S), i32)
+        return {"tokens": t, "labels": t}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"tokens": jax.ShapeDtypeStruct(
+                (B, S, cfg.n_codebooks), i32)}
+        if cfg.family == "vlm":
+            sv = min(cfg.vision_tokens, S // 4)
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - sv), i32),
+                "vision_embeds": jax.ShapeDtypeStruct(
+                    (B, sv, cfg.d_model), jnp.bfloat16),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of length S
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.family == "audio" else (B, 1)
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, jnp.bfloat16))
+    # mark the cache as length-S (abstract value: keep the struct)
+    return {"tokens": jax.ShapeDtypeStruct(tok_shape, i32), "cache": cache}
+
+
+# --------------------------------------------------------- smoke batch -----
+def make_smoke_batch(cfg: ModelConfig, batch: int, seq: int, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "audio":
+        t = jax.random.randint(
+            k1, (batch, seq, cfg.n_codebooks), 0, cfg.vocab_size)
+        return {"tokens": t, "labels": t}
+    if cfg.family == "vlm":
+        sv = max(4, seq // 4)
+        st = seq - sv
+        return {
+            "tokens": jax.random.randint(k1, (batch, st), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k2, (batch, st), 0, cfg.vocab_size),
+            "vision_embeds": jax.random.normal(
+                k3, (batch, sv, cfg.d_model), jnp.float32).astype(
+                    jnp.bfloat16) * 0.02,
+        }
+    t = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size)
+    return {"tokens": t, "labels": t}

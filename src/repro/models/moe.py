@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer: grouped, sort-based dispatch with capacity.
+
+Design (DESIGN.md §5): the classic GShard one-hot dispatch tensor is
+O(N * E * C) — hopeless at Kimi-K2 scale (384 experts).  Instead tokens are
+split into `moe_groups` routing groups (aligned with the data shards);
+within a group, expert assignment is resolved with a *local* argsort +
+rank-within-segment, and tokens are scattered into an (G, E, C, d) buffer.
+Under pjit the G axis is batch-sharded and the E axis expert-sharded
+("model"), so the scatter lowers to exactly the all-to-all dispatch of
+expert parallelism — the same owner-routed gather pattern as the paper's
+NMSL (DESIGN.md §5).
+
+Top-k gates are softmax-renormalized; capacity overflow drops tokens
+(standard capacity-factor semantics; the residual connection carries them).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.template import Leaf
+from repro.sharding.partition import ShardCtx, constrain
+
+
+def moe_template(cfg: ModelConfig, stacked: tuple = ()) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    st = stacked
+    sta = tuple("layers" for _ in stacked)
+    return {
+        "router": Leaf(st + (d, E), sta + ("embed", "experts"),
+                       scale=0.02, fan_in_dims=()),
+        "w_gate": Leaf(st + (E, d, f), sta + ("experts", "embed", "ff_expert")),
+        "w_up": Leaf(st + (E, d, f), sta + ("experts", "embed", "ff_expert")),
+        "w_down": Leaf(st + (E, f, d), sta + ("experts", "ff_expert", "embed")),
+    }
+
+
+def capacity_per_group(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = tokens_per_group * cfg.moe_top_k / cfg.n_experts * cfg.capacity_factor
+    # round up to a multiple of 8 for friendlier layouts
+    return max(8, int(math.ceil(c / 8.0)) * 8)
+
+
+def pick_groups(n_tokens: int, n_shards: int, requested: int) -> int:
+    """Routing-group count: a multiple of the total shard count that
+    divides the token count, so per-group sorts are shard-local."""
+    G = max(requested, n_shards)
+    G = min(G, n_tokens)
+    for g in range(G, 0, -1):
+        if n_tokens % g == 0 and g % n_shards == 0:
+            return g
+    for g in range(G, 0, -1):
+        if n_tokens % g == 0:
+            return g
+    return 1
+
+
+def _n_shards(ctx: ShardCtx) -> int:
+    if ctx is None or ctx.mesh is None:
+        return 1
+    n = 1
+    for ax in tuple(ctx.rules.batch_axes) + (ctx.rules.tensor_axis,):
+        n *= ctx.mesh.shape[ax]
+    return n
+
+
+def moe_forward(p, x, cfg: ModelConfig, ctx: ShardCtx, n_groups: int):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    E, k = cfg.n_experts, cfg.moe_top_k
+    N = B * S
+    G = pick_groups(N, _n_shards(ctx), n_groups)
+    Ng = N // G
+    C = capacity_per_group(Ng, cfg)
+
+    xg = x.reshape(G, Ng, d)
+    xg = constrain(xg, ctx, "moe_groups", None, None)
+    # router in mixed precision: bf16 operands, f32 accumulation — avoids
+    # materializing an f32 copy of the full residual per layer (§Perf).
+    logits = jnp.einsum("gnd,de->gne", xg, p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (G, Ng, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- local sort-based dispatch (per group) -----------------------------
+    eid = expert_idx.reshape(G, Ng * k)
+    tok = jnp.broadcast_to(
+        jnp.arange(Ng)[:, None], (Ng, k)).reshape(Ng * k)
+    gates_flat = gate_vals.reshape(G, Ng * k)
+    order = jnp.argsort(eid, axis=-1, stable=True)
+    eid_s = jnp.take_along_axis(eid, order, -1)
+    tok_s = tok[order]                                     # (G, Ng*k)
+    gate_s = jnp.take_along_axis(gates_flat, order, -1)
+    seg_start = jax.vmap(
+        lambda e: jnp.searchsorted(e, jnp.arange(E), side="left"))(eid_s)
+    rank = jnp.arange(Ng * k)[None, :] - jnp.take_along_axis(
+        seg_start, eid_s, -1)
+    keep = rank < C
+    slot = eid_s * C + jnp.clip(rank, 0, C - 1)            # (G, Ng*k)
+    slot = jnp.where(keep, slot, E * C)                    # overflow bin
+
+    # scatter tokens into the expert buffer (the EP all-to-all)
+    src = jnp.take_along_axis(
+        xg, tok_s[..., None], axis=1)                      # (G, Ng*k, d)
+    src = constrain(src, ctx, "moe_groups", None, None)
+    buf = jnp.zeros((G, E * C + 1, d), dt)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, src)
+    buf = constrain(buf, ctx, "moe_groups", None, None)    # scatter is local
+    buf = buf[:, : E * C].reshape(G, E, C, d)
+    # EP dispatch: reshard groups->data, experts->model (the all-to-all)
+    buf = constrain(buf, ctx, "batch", "experts", None, None)
+
+    # ---- expert computation (SwiGLU) --------------------------------------
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, ctx, "batch", "experts", None, None)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    out_buf = constrain(out_buf, ctx, "batch", "experts", None, None)
+
+    # ---- combine (return a2a + local gather + weighted sum) ---------------
+    flat = jnp.concatenate(
+        [out_buf.reshape(G, E * C, d),
+         jnp.zeros((G, 1, d), dt)], axis=1)                # overflow -> 0
+    flat = constrain(flat, ctx, "moe_groups", None, None)  # return a2a
+    back = jnp.take_along_axis(flat, slot[..., None], axis=1)  # (G, Ng*k, d)
+    back = back * gate_s[..., None].astype(dt)
+    y = jnp.zeros((G, Ng, d), dt)
+    y = jax.vmap(lambda acc, t, v: acc.at[t].add(v))(y, tok_s, back)
+    y = constrain(y, ctx, "moe_groups", None, None)
+
+    aux = router_z_and_balance_loss(logits, expert_idx, E)
+    return y.reshape(B, S, d), aux
+
+
+def router_z_and_balance_loss(logits, expert_idx, E: int):
+    """Standard aux losses: load-balance (switch-style) + router z-loss."""
+    probs = jax.nn.softmax(logits, axis=-1)                # (G, Ng, E)
+    me = jnp.mean(probs, axis=(0, 1))
+    one_hot = jax.nn.one_hot(expert_idx[..., 0], E)        # top-1 counts
+    ce = jnp.mean(one_hot, axis=(0, 1))
+    balance = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return {"balance_loss": balance, "z_loss": z}

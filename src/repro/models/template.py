@@ -1,0 +1,76 @@
+"""Parameter templates: one source of truth for shapes, init and sharding.
+
+A template is a nested dict of `Leaf`s.  From it we derive
+  - `init_params`     concrete arrays (CPU smoke tests, examples)
+  - `abstract_params` ShapeDtypeStructs (dry-run: no allocation)
+  - `axes_tree`       logical-axis tuples (sharding/partition.py rules)
+keeping the three in sync by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: tuple
+    axes: tuple                  # logical axes, len(axes) == len(shape)
+    init: str = "normal"         # normal | zeros | ones
+    scale: float | None = None   # normal stddev; None -> 1/sqrt(fan_in)
+    fan_in_dims: tuple = (-2,)   # dims whose product is fan-in
+    dtype: str | None = None     # None -> cfg.param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def init_params(template, key, param_dtype):
+    """Concrete initialization with per-leaf folded keys."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_leaf)
+    out = []
+    for i, lf in enumerate(leaves):
+        dt = jnp.dtype(lf.dtype or param_dtype)
+        k = jax.random.fold_in(key, i)
+        if lf.init == "zeros":
+            arr = jnp.zeros(lf.shape, dt)
+        elif lf.init == "ones":
+            arr = jnp.ones(lf.shape, dt)
+        else:
+            fan_in = 1
+            for d in lf.fan_in_dims:
+                fan_in *= lf.shape[d]
+            scale = lf.scale if lf.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(k, lf.shape, jnp.float32) * scale).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(template, param_dtype):
+    """ShapeDtypeStruct tree — the dry-run path (never allocates)."""
+    return jax.tree.map(
+        lambda lf: jax.ShapeDtypeStruct(
+            lf.shape, jnp.dtype(lf.dtype or param_dtype)),
+        template, is_leaf=is_leaf)
+
+
+def axes_tree(template):
+    """Tree of logical-axes tuples, same structure as the params."""
+    return jax.tree.map(lambda lf: lf.axes, template, is_leaf=is_leaf)
+
+
+def count_params(template) -> int:
+    n = 0
+    for lf in jax.tree.leaves(template, is_leaf=is_leaf):
+        size = 1
+        for s in lf.shape:
+            size *= s
+        n += size
+    return n

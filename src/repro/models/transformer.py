@@ -1,0 +1,400 @@
+"""Model assembly for every assigned architecture family.
+
+One template + one forward covering:
+  dense  — GQA transformer (yi-6b, qwen1.5-110b, stablelm-3b, minitron-8b)
+  moe    — GQA + grouped-dispatch MoE FFN (kimi-k2, llama4-scout)
+  ssm    — attention-free Mamba2/SSD stack (mamba2-2.7b)
+  hybrid — Mamba2 stack with one *shared* attention block applied every
+           `attn_every` layers (zamba2-2.7b)
+  vlm    — dense backbone + precomputed patch-embedding prefix + M-RoPE
+           (qwen2-vl-7b; frontend is a stub per the brief)
+  audio  — dense backbone over K EnCodec codebook streams: summed codebook
+           embeddings, K output heads (musicgen-medium)
+
+Execution modes: lax.scan over stacked layer params (training, smoke tests
+— small HLO) and `unroll=True` (dry-run — exact cost_analysis and
+collective counts; see EXPERIMENTS.md §Dry-run).
+
+Cache protocol:
+  forward(cache=None)                      train: no KV kept
+  forward(cache=None, return_cache=True)   prefill: per-layer KV/SSM state
+                                           of length S is collected
+  forward(cache=DecodeCache, S==1)         decode: O(1) per token
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.mamba2 import (
+    MambaState, init_mamba_state, mamba_forward, mamba_template,
+)
+from repro.models.moe import moe_forward, moe_template
+from repro.models.template import Leaf
+from repro.sharding.partition import ShardCtx, constrain
+
+DEFAULT_MOE_GROUPS = 32
+
+
+def _replace(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, **kw)
+
+
+# =========================================================== templates =====
+def _block_template(cfg: ModelConfig, stacked: tuple) -> dict:
+    sta = tuple("layers" for _ in stacked)
+    d = cfg.d_model
+    t = {
+        "ln1": Leaf(stacked + (d,), sta + ("norep",), init="ones"),
+        "attn": L.attention_template(cfg, stacked),
+        "ln2": Leaf(stacked + (d,), sta + ("norep",), init="ones"),
+    }
+    if cfg.family == "moe":
+        t["moe"] = moe_template(cfg, stacked)
+    else:
+        t["mlp"] = L.mlp_template(cfg, stacked)
+    return t
+
+
+def model_template(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    t: dict[str, Any] = {"final_norm": Leaf((d,), ("norep",), init="ones")}
+    if cfg.family == "audio":
+        K = cfg.n_codebooks
+        t["embed"] = Leaf((K, V, d), ("codebooks", "vocab", "embed"),
+                          scale=0.02, fan_in_dims=())
+        t["out_head"] = Leaf((K, d, V), ("codebooks", "embed", "vocab"))
+    else:
+        t["embed"] = Leaf((V, d), ("vocab", "embed"),
+                          scale=0.02, fan_in_dims=())
+        if not cfg.tie_embeddings:
+            t["out_head"] = Leaf((d, V), ("embed", "vocab"))
+    if cfg.family == "ssm":
+        Ln = cfg.n_layers
+        t["layers"] = {
+            "ln": Leaf((Ln, d), ("layers", "norep"), init="ones"),
+            "mamba": mamba_template(cfg, (Ln,)),
+        }
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        t["layers"] = {
+            "ln": Leaf((G, per, d), ("groups", "layers", "norep"),
+                       init="ones"),
+            "mamba": mamba_template(cfg, (G, per)),
+        }
+        t["shared"] = _block_template(_replace(cfg, family="dense"), ())
+    else:  # dense / moe / vlm / audio
+        t["layers"] = _block_template(cfg, (cfg.n_layers,))
+    return t
+
+
+# ============================================================= caches ======
+class DecodeCache(NamedTuple):
+    """KV caches + SSM states, layer-stacked.  Unused leaves are ()."""
+
+    kv_k: Any   # (L, B, Smax, KV, hd) or (); hybrid: (G, B, Smax, KV, hd)
+    kv_v: Any
+    ssm: Any    # MambaState with layer-stacked leaves, or ()
+    length: Any  # scalar int32: current fill
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> DecodeCache:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family == "ssm":
+        st = init_mamba_state(cfg, batch)
+        st = MambaState(*(jnp.broadcast_to(x, (cfg.n_layers,) + x.shape)
+                          for x in st))
+        return DecodeCache((), (), st, jnp.int32(0))
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        st = init_mamba_state(cfg, batch)
+        st = MambaState(*(jnp.broadcast_to(x, (G, per) + x.shape)
+                          for x in st))
+        kv = jnp.zeros((G, batch, max_len, KV, hd), dtype)
+        return DecodeCache(kv, kv, st, jnp.int32(0))
+    kv = jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype)
+    return DecodeCache(kv, kv, (), jnp.int32(0))
+
+
+# ============================================================ blocks =======
+def _dense_block(p, x, cfg, ctx, positions, kv_cache, cache_len,
+                 positions_thw, n_groups):
+    """One attn + FFN block.  kv_cache: None (full-seq) or (k, v) buffers."""
+    h = L.rmsnorm(x, p["ln1"].astype(x.dtype), cfg.norm_eps)
+    attn_out, new_kv = L.attention_forward(
+        p["attn"], h, cfg, ctx, positions, kv_cache, cache_len,
+        positions_thw)
+    x = x + attn_out
+    h = L.rmsnorm(x, p["ln2"].astype(x.dtype), cfg.norm_eps)
+    aux = None
+    if "moe" in p:
+        ff, aux = moe_forward(p["moe"], h, cfg, ctx, n_groups)
+    else:
+        ff = L.mlp_forward(p["mlp"], h, ctx)
+    # Megatron-SP: the residual stream (and hence every remat-saved
+    # tensor) lives sequence-sharded over the TP axis between blocks.
+    return constrain(x + ff, ctx, "batch", "actseq", None), new_kv, aux
+
+
+def _ssm_block(p, x, cfg, ctx, state):
+    h = L.rmsnorm(x, p["ln"].astype(x.dtype), cfg.norm_eps)
+    out, new_state = mamba_forward(p["mamba"], h, cfg, ctx, state)
+    return constrain(x + out, ctx, "batch", "actseq", None), new_state
+
+
+# ========================================================== embedding ======
+def _embed(params, cfg: ModelConfig, batch: dict, ctx: ShardCtx):
+    dt = cfg.act_dtype
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        emb = params["embed"]  # (K, V, d)
+        xs = [jnp.take(emb[k], tokens[..., k], axis=0)
+              for k in range(cfg.n_codebooks)]
+        x = sum(xs).astype(dt)
+        B, S = tokens.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, positions, None, jnp.ones((B, S), bool)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    B, S = tokens.shape
+    loss_mask = jnp.ones((B, S), bool)
+    positions_thw = None
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(dt)     # (B, Sv, d)
+        x = jnp.concatenate([ve, x], axis=1)
+        Sv = ve.shape[1]
+        S = S + Sv
+        loss_mask = jnp.concatenate(
+            [jnp.zeros((B, Sv), bool), loss_mask], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.m_rope:
+        positions_thw = batch.get("positions_thw")  # may be None: see forward
+    x = constrain(x, ctx, "batch", "actseq", None)
+    return x, positions, positions_thw, loss_mask
+
+
+def _logits(params, cfg: ModelConfig, x):
+    xf = x.astype(jnp.float32)
+    if cfg.family == "audio":
+        return jnp.einsum("bsd,kdv->bskv", xf,
+                          params["out_head"].astype(jnp.float32))
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", xf,
+                          params["embed"].astype(jnp.float32))
+    return jnp.einsum("bsd,dv->bsv", xf,
+                      params["out_head"].astype(jnp.float32))
+
+
+# ============================================================ forward ======
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: dict,
+    ctx: ShardCtx = ShardCtx(),
+    cache: DecodeCache | None = None,
+    unroll: bool = False,
+    return_cache: bool = False,
+    moe_groups: int = DEFAULT_MOE_GROUPS,
+    return_hidden: bool = False,
+):
+    """Returns (logits, aux) or (logits, aux, cache_out).
+
+    cache=None: full-sequence forward; with return_cache=True the per-layer
+    KV (length S) / final SSM states are collected (prefill).
+    cache=DecodeCache: single-token decode (S must be 1).
+    """
+    decode = cache is not None
+    collect = return_cache and not decode
+    x, positions, positions_thw, loss_mask = _embed(params, cfg, batch, ctx)
+    B, S, _ = x.shape
+    if decode:
+        assert S == 1, "decode path requires S == 1; use prefill for S > 1"
+        positions = positions + cache.length
+    if cfg.m_rope and positions_thw is None:
+        # text-default M-RoPE: t = h = w = (cache-offset) position
+        positions_thw = jnp.broadcast_to(
+            positions[..., None], positions.shape + (3,))
+    cache_len = cache.length if decode else None
+    aux_acc = {"balance_loss": jnp.float32(0), "z_loss": jnp.float32(0)}
+    use_remat = cfg.remat and not decode
+    lp = params["layers"]
+    cache_out = None
+
+    if cfg.family == "ssm":
+        def body(x, p, st):
+            return _ssm_block(p, x, cfg, ctx, st)  # (x, new_st)
+        if use_remat:
+            body = jax.checkpoint(body)
+        if unroll:
+            new_sts = []
+            for i in range(cfg.n_layers):
+                pi = jax.tree.map(lambda a: a[i], lp)
+                sti = jax.tree.map(lambda a: a[i], cache.ssm) if decode \
+                    else None
+                x, nst = body(x, pi, sti)
+                new_sts.append(nst)
+            new_ssm = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_sts)
+                       if (decode or collect) else ())
+        else:
+            def scan_body(c, p):
+                xx, nst = body(c, p, None)
+                return xx, (nst if collect else None)
+            def scan_body_decode(c, pin):
+                p, st = pin
+                return body(c, p, st)
+            if decode:
+                x, new_ssm = jax.lax.scan(scan_body_decode, x,
+                                          (lp, cache.ssm))
+            else:
+                x, new_ssm = jax.lax.scan(scan_body, x, lp)
+                if not collect:
+                    new_ssm = ()
+        if decode:
+            cache_out = DecodeCache((), (), new_ssm, cache.length + S)
+        elif collect:
+            cache_out = DecodeCache((), (), new_ssm, jnp.int32(S))
+
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        shared = params["shared"]
+        dense_cfg = _replace(cfg, family="dense")
+
+        def group_body(x, pg, stg, kvg):
+            def inner(x, pj, stj):
+                return _ssm_block(pj, x, cfg, ctx, stj)
+            if unroll:
+                nsts = []
+                for j in range(per):
+                    pj = jax.tree.map(lambda a: a[j], pg)
+                    stj = jax.tree.map(lambda a: a[j], stg) \
+                        if stg is not None else None
+                    x, nst = inner(x, pj, stj)
+                    nsts.append(nst)
+                new_st = (jax.tree.map(lambda *xs: jnp.stack(xs), *nsts)
+                          if (decode or collect) else None)
+            else:
+                if decode:
+                    x, new_st = jax.lax.scan(
+                        lambda c, pin: inner(c, pin[0], pin[1]),
+                        x, (pg, stg))
+                else:
+                    x, new_st = jax.lax.scan(
+                        lambda c, pj: (lambda r: (r[0], r[1] if collect
+                                                  else None))(
+                            inner(c, pj, None)),
+                        x, pg)
+                    if not collect:
+                        new_st = None
+            x, new_kv, _ = _dense_block(
+                shared, x, dense_cfg, ctx, positions, kvg, cache_len,
+                positions_thw, moe_groups)
+            return x, new_st, new_kv
+
+        if use_remat:
+            group_body = jax.checkpoint(group_body)
+        if unroll:
+            new_sts, new_ks, new_vs = [], [], []
+            for g in range(G):
+                pg = jax.tree.map(lambda a: a[g], lp)
+                stg = jax.tree.map(lambda a: a[g], cache.ssm) \
+                    if decode else None
+                kvg = (cache.kv_k[g], cache.kv_v[g]) if decode else None
+                x, nst, nkv = group_body(x, pg, stg, kvg)
+                new_sts.append(nst)
+                new_ks.append(nkv[0])
+                new_vs.append(nkv[1])
+            if decode or collect:
+                new_ssm = jax.tree.map(lambda *xs: jnp.stack(xs), *new_sts)
+                cache_out = DecodeCache(
+                    jnp.stack(new_ks), jnp.stack(new_vs), new_ssm,
+                    (cache.length + S) if decode else jnp.int32(S))
+        else:
+            # lax.scan over groups: one group body in the HLO (compile time
+            # and buffer liveness stay O(1) in G; the python-unrolled loop
+            # kept every group's remat temps live simultaneously — 181 GiB
+            # vs 24 GiB per device on zamba2 train_4k, see EXPERIMENTS.md).
+            if decode:
+                def scan_g(c, xs):
+                    pg, stg, kg, vg = xs
+                    y, nst, nkv = group_body(c, pg, stg, (kg, vg))
+                    return y, (nst, nkv)
+                x, (new_ssm, nkvs) = jax.lax.scan(
+                    scan_g, x, (lp, cache.ssm, cache.kv_k, cache.kv_v))
+            else:
+                def scan_g(c, pg):
+                    y, nst, nkv = group_body(c, pg, None, None)
+                    return y, (nst, nkv) if collect else (None, None)
+                x, (new_ssm, nkvs) = jax.lax.scan(scan_g, x, lp)
+            if decode or collect:
+                cache_out = DecodeCache(
+                    nkvs[0], nkvs[1], new_ssm,
+                    (cache.length + S) if decode else jnp.int32(S))
+
+    else:  # dense / moe / vlm / audio
+        def body(x, p, kv):
+            return _dense_block(p, x, cfg, ctx, positions, kv, cache_len,
+                                positions_thw, moe_groups)
+        if use_remat:
+            body = jax.checkpoint(body)
+        if unroll:
+            new_ks, new_vs = [], []
+            for i in range(cfg.n_layers):
+                pi = jax.tree.map(lambda a: a[i], lp)
+                kvi = (cache.kv_k[i], cache.kv_v[i]) if decode else None
+                x, nkv, aux = body(x, pi, kvi)
+                if aux is not None:
+                    aux_acc = {k: aux_acc[k] + aux[k] for k in
+                               ("balance_loss", "z_loss")}
+                if decode or collect:
+                    new_ks.append(nkv[0])
+                    new_vs.append(nkv[1])
+            if decode or collect:
+                cache_out = DecodeCache(
+                    jnp.stack(new_ks), jnp.stack(new_vs), (),
+                    (cache.length + S) if decode else jnp.int32(S))
+        else:
+            if decode:
+                def scan_body(c, lin):
+                    p, k, v = lin
+                    xx, nkv, aux = body(c, p, (k, v))
+                    return xx, nkv
+                x, nkvs = jax.lax.scan(scan_body, x,
+                                       (lp, cache.kv_k, cache.kv_v))
+                cache_out = DecodeCache(nkvs[0], nkvs[1], (),
+                                        cache.length + S)
+            else:
+                def scan_body(c, p):
+                    xx, nkv, aux = body(c, p, None)
+                    ys = (nkv if collect else None,
+                          aux if aux is not None else None)
+                    return xx, ys
+                x, (nkvs, auxs) = jax.lax.scan(scan_body, x, lp)
+                if cfg.family == "moe":
+                    aux_acc = {k: jnp.sum(auxs[k]) for k in
+                               ("balance_loss", "z_loss")}
+                if collect:
+                    cache_out = DecodeCache(nkvs[0], nkvs[1], (),
+                                            jnp.int32(S))
+
+    x = constrain(x, ctx, "batch", None, None)  # gather seq for vocab-TP
+    x = L.rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    if return_hidden:
+        # training loss path: the (B, S, V) f32 logits pipeline at 150k+
+        # vocabs is the single biggest activation (§Perf kimi iteration 3)
+        # — the caller computes head+loss in sequence chunks instead.
+        aux_acc["loss_mask"] = loss_mask
+        return x, aux_acc
+    logits = _logits(params, cfg, x)
+    logits = constrain(logits, ctx, "batch", None, "vocab")
+    aux_acc["loss_mask"] = loss_mask
+    if decode or collect:
+        return logits, aux_acc, cache_out
+    return logits, aux_acc

@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two codecs:
+  - bf16: cast gradients to bfloat16 before the cross-replica reduction
+    (2x less DP all-reduce traffic, negligible quality impact).
+  - int8: per-tensor symmetric quantization with an error-feedback
+    accumulator (the quantization residual is added back next step), the
+    standard convergence-preserving trick for lossy gradient codecs.
+
+The train driver applies compress() before psum/all-reduce-equivalent
+boundaries and decompress() after; error state is carried in the train
+state.  Tested in tests/test_substrate.py for round-trip error bounds and
+error-feedback convergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    codec: str = "none"   # none | bf16 | int8
+    error_feedback: bool = True
+
+
+jax.tree_util.register_static(CompressConfig)
+
+
+class CompressState(NamedTuple):
+    error: Any  # residual accumulator tree (int8 codec) or ()
+
+
+def init_state(params, cfg: CompressConfig) -> CompressState:
+    if cfg.codec == "int8" and cfg.error_feedback:
+        return CompressState(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    return CompressState(())
+
+
+def compress(grads, state: CompressState, cfg: CompressConfig):
+    """Returns (wire_grads, new_state, decompress_fn)."""
+    if cfg.codec == "none":
+        return grads, state, lambda g: g
+    if cfg.codec == "bf16":
+        return (jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads),
+                state, lambda g: jax.tree.map(
+                    lambda x: x.astype(jnp.float32), g))
+    if cfg.codec == "int8":
+        def q(g, e):
+            g32 = g.astype(jnp.float32) + (e if e is not None else 0.0)
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+            qv = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            err = g32 - qv.astype(jnp.float32) * scale
+            return (qv, scale), err
+        err_in = state.error if state.error != () else jax.tree.map(
+            lambda g: None, grads)
+        leaves, treedef = jax.tree.flatten(grads)
+        errs = (treedef.flatten_up_to(state.error)
+                if state.error != () else [None] * len(leaves))
+        pairs = [q(g, e) for g, e in zip(leaves, errs)]
+        wire = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+        new_err = (jax.tree.unflatten(treedef, [p[1] for p in pairs])
+                   if cfg.error_feedback else ())
+
+        def dec(w):
+            lv = treedef.flatten_up_to(w)
+            return jax.tree.unflatten(
+                treedef,
+                [v.astype(jnp.float32) * s for (v, s) in lv])
+        return wire, CompressState(new_err), dec
+    raise ValueError(cfg.codec)

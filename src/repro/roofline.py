@@ -1,0 +1,176 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (TPU v5e constants):
+  compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+  memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective = collective_bytes_per_device / link_bw    (~50 GB/s/link ICI)
+
+XLA's `cost_analysis()` is *per partition* after SPMD partitioning (the
+module is the per-device program), so no further division by chip count.
+IMPORTANT pitfall (measured, see EXPERIMENTS.md §Dry-run): cost_analysis
+counts a while-loop (lax.scan) body ONCE, not x trip-count — dry-runs
+therefore lower with unrolled layers so FLOPs/bytes/collectives are exact.
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and
+sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (async `-start` variants counted once,
+`-done` skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# ----------------------------------------------------------------- HW ------
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([A-Za-z0-9_.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _type_bytes(typestr: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(typestr))
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in optimized HLO text.
+
+    Optimized HLO references operands by name only (`all-reduce(%dot)`), so
+    a first pass builds a symbol table name -> result bytes; the second
+    pass resolves each collective's operand names against it.
+    """
+    sizes: dict = {}
+    coll_lines: list = []
+    for line in hlo_text.splitlines():
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, rest = md.group(1), md.group(2)
+        # result type: leading tuple "(...)" or single "dtype[shape]{...}"
+        if rest.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            typestr = rest[: i + 1]
+        else:
+            typestr = rest.split(" ", 1)[0]
+        sizes[name] = _type_bytes(typestr)
+        m = _COLL_RE.search(rest)
+        if m:
+            coll_lines.append((m.group(1), rest, m.end()
+                               - (len(line) - len(rest))))
+
+    by_kind: dict = {}
+    counts: dict = {}
+    for kind, rest, _ in coll_lines:
+        m = _COLL_RE.search(rest)
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operands = rest[start : i - 1]
+        b = 0
+        inline = _type_bytes(operands)
+        if inline:
+            b = inline  # older HLO dialects carry operand types inline
+        else:
+            for name in _OPERAND_RE.findall(operands):
+                b += sizes.get(name, 0)
+        by_kind[kind] = by_kind.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return CollectiveStats(by_kind, counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per device
+    hbm_bytes: float          # per device
+    coll_bytes: float         # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float        # 6*N*D (analytic, global)
+    useful_ratio: float       # model_flops / (flops * n_chips)
+    n_chips: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(compiled, n_chips: int, model_flops: float,
+             hlo_text: str | None = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    c = flops / PEAK_FLOPS
+    m = hbm / HBM_BW
+    k = coll.total_bytes / ICI_BW
+    terms = {"compute": c, "memory": m, "collective": k}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo = flops * n_chips
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=float(coll.total_bytes),
+        compute_s=c, memory_s=m, collective_s=k, bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_hlo) if total_hlo else 0.0,
+        n_chips=n_chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE).
+
+    train: 6*N*D per step; prefill: 2*N*D forward-only; decode: 2*N*D with
+    D = global_batch tokens (one token per sequence).
+    """
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,10 @@
+from repro.runtime.elastic import RemeshPlan, build_mesh, plan_remesh
+from repro.runtime.preemption import PreemptionGuard
+from repro.runtime.watchdog import (
+    DEGRADED, EVICT, HEALTHY, Watchdog, WatchdogConfig,
+)
+
+__all__ = [
+    "DEGRADED", "EVICT", "HEALTHY", "PreemptionGuard", "RemeshPlan",
+    "Watchdog", "WatchdogConfig", "build_mesh", "plan_remesh",
+]

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP on one mesh).
+
+Every parameter in the model template carries a tuple of *logical* axis
+names; this module maps them onto mesh axes.  The production meshes are
+  single-pod: (data=16, model=16)
+  multi-pod : (pod=2, data=16, model=16)
+with the batch sharded over ("pod", "data"), tensor-parallel dims over
+"model", and FSDP (when enabled) sharding the non-TP weight dim over
+"data".  Rules are a plain dict so the §Perf hillclimb can swap schemes
+per-cell without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary used by model templates.
+#   layers/groups: scan dims, never sharded
+#   embed:    d_model dim of weights (FSDP target)
+#   q_heads:  fused head*head_dim output dim of attention projections (TP)
+#   kv_heads: fused kv_head*head_dim dim (TP only if divisible)
+#   ff:       dense FFN hidden (TP)
+#   ff_expert: per-expert FFN hidden (unsharded; experts carry the TP)
+#   experts:  MoE expert dim (EP -> "model")
+#   vocab:    embedding/vocab dim (TP)
+#   ssm_inner: mamba d_inner (TP)
+#   ssm_heads: mamba head dim (TP)
+#   norep:    always replicated
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or None). fsdp=False drops the FSDP dim."""
+
+    tensor_axis: str = "model"
+    fsdp_axis: str | None = "data"   # None disables FSDP (pure replication)
+    batch_axes: tuple = ("data",)    # activations; multi-pod: ("pod","data")
+    seq_axis: str | None = None      # SP for long-context decode caches
+    act_seq_axis: str | None = "model"  # Megatron-SP: residual activations
+                                        # sharded seq-wise over the TP axis
+
+    def logical_to_mesh(self) -> dict:
+        t, f = self.tensor_axis, self.fsdp_axis
+        return {
+            "layers": None,
+            "groups": None,
+            "embed": f,
+            "q_heads": t,
+            "kv_heads": t,      # dropped at spec time if not divisible
+            "ff": t,
+            "ff_expert": None,
+            "experts": t,
+            "vocab": t,
+            "ssm_inner": t,
+            "ssm_heads": t,
+            "ssm_state": None,
+            "conv": None,
+            "codebooks": None,
+            "norep": None,
+            "batch": self.batch_axes,
+            "seq": self.seq_axis,
+            "actseq": self.act_seq_axis,
+            # MoE routing groups spread over every mesh axis: sorts stay
+            # shard-local; the dispatch a2a happens at the expert einsum.
+            "moe_groups": tuple(self.batch_axes) + (self.tensor_axis,),
+        }
+
+
+PROD_RULES = ShardingRules()
+MULTIPOD_RULES = ShardingRules(batch_axes=("pod", "data"))
+
+
+def spec_for(axes: tuple, rules: ShardingRules, shape: tuple | None = None,
+             mesh: Mesh | None = None) -> P:
+    """Map a tuple of logical axes to a PartitionSpec.
+
+    If `shape` and `mesh` are given, any dim not divisible by its mesh-axis
+    size degrades to replication (e.g. 4 kv heads on a 16-way model axis).
+    """
+    table = rules.logical_to_mesh()
+    out = []
+    for i, ax in enumerate(axes):
+        m = table.get(ax)
+        if m is None:
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            size = 1
+            for a in (m if isinstance(m, tuple) else (m,)):
+                size *= mesh.shape[a]
+            if shape[i] % size != 0:
+                out.append(None)
+                continue
+        out.append(m)
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shape_tree, rules: ShardingRules):
+    """Pytree of logical-axes tuples + shapes -> pytree of NamedSharding."""
+    def one(axes, sds):
+        return NamedSharding(mesh, spec_for(axes, rules, sds.shape, mesh))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(a, (str, type(None))) for a in x))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + rules bundle threaded through model code.
+
+    mesh=None (CPU smoke tests) turns every constraint into a no-op.
+    """
+
+    mesh: Mesh | None = None
+    rules: ShardingRules = PROD_RULES
+
+
+jax.tree_util.register_static(ShardCtx)
+
+NO_SHARD = ShardCtx(mesh=None)
+
+
+def constrain(x, ctx: ShardCtx, *axes):
+    """with_sharding_constraint by logical axes (no-op without a mesh)."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = spec_for(axes, ctx.rules, x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

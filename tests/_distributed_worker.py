@@ -1,0 +1,94 @@
+"""Multi-device worker for tests/test_distributed.py.
+
+Runs under XLA_FLAGS=--xla_force_host_platform_device_count=8 in a
+subprocess (the main pytest process must keep seeing 1 device).  Asserts:
+
+  1. the shard_map'd bucket-sharded SeedMap query (the NMSL analogue)
+     returns exactly the single-device CSR query's results;
+  2. the full genome-scale serve step (packed reference, sharded tables)
+     maps simulated pairs to the same positions as the reference pipeline;
+  3. the data-parallel map_pairs wrapper equals single-device map_pairs.
+
+Exit code 0 = all checks passed.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap, map_pairs,
+    random_reference, simulate_pairs,
+)
+from repro.core.distributed import (  # noqa: E402
+    make_distributed_map_pairs, make_sharded_query, shard_seedmap,
+)
+from repro.core.encoding import pack_2bit  # noqa: E402
+from repro.core.genpairx_step import make_genpair_serve_step  # noqa: E402
+from repro.core.pipeline import PipelineConfig  # noqa: E402
+from repro.core.query import query_read_batch  # noqa: E402
+from repro.core.seeding import seed_read_batch  # noqa: E402
+from repro.core.seedmap import INVALID_LOC  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    ref = random_reference(120_000, rng)
+    cfg = PipelineConfig()
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=16))
+    sim = simulate_pairs(ref, 64, ReadSimConfig(sub_rate=2e-3), seed=1)
+    reads1 = jnp.asarray(sim.reads1)
+    reads2 = jnp.asarray(sim.reads2)
+
+    # ---- 1. sharded query == single-device query -------------------------
+    seeds = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                            sm.config.hash_seed)
+    q_single = query_read_batch(sm, seeds, cfg.max_locs_per_seed)
+    ssm = shard_seedmap(sm, 4)
+    qfn = make_sharded_query(mesh)
+    q_shard = qfn(ssm, seeds.hashes, seeds.offsets, cfg.max_locs_per_seed)
+    np.testing.assert_array_equal(np.asarray(q_single.starts),
+                                  np.asarray(q_shard.starts))
+    print("ok: sharded query == CSR query")
+
+    # ---- 2. genome-scale serve step == reference pipeline ----------------
+    ref_words = jnp.asarray(pack_2bit(ref))
+    step = make_genpair_serve_step(mesh, cfg, sm.config)
+    res_d = step(ssm.offsets, ssm.locations, ref_words, reads1, reads2)
+    res_s = map_pairs(sm, jnp.asarray(ref), reads1, reads2, cfg)
+    np.testing.assert_array_equal(np.asarray(res_d.pos1),
+                                  np.asarray(res_s.pos1))
+    np.testing.assert_array_equal(np.asarray(res_d.method),
+                                  np.asarray(res_s.method))
+    np.testing.assert_array_equal(np.asarray(res_d.score1),
+                                  np.asarray(res_s.score1))
+    print("ok: distributed serve step == reference pipeline")
+
+    # ---- 3. DP-sharded map_pairs == single-device ------------------------
+    dmap = make_distributed_map_pairs(mesh, cfg)
+    res_dp = dmap(sm, jnp.asarray(ref), reads1, reads2)
+    np.testing.assert_array_equal(np.asarray(res_dp.pos1),
+                                  np.asarray(res_s.pos1))
+    print("ok: data-parallel map_pairs == single-device")
+
+    # ---- 4. G2 prescreen keeps the mapping (§Perf beyond-paper opt) ----
+    import dataclasses
+    cfg_p = dataclasses.replace(cfg, prescreen_top=2)
+    step_p = make_genpair_serve_step(mesh, cfg_p, sm.config)
+    res_p = step_p(ssm.offsets, ssm.locations, ref_words, reads1, reads2)
+    same_pos = (np.asarray(res_p.pos1) == np.asarray(res_s.pos1)).mean()
+    assert same_pos >= 0.97, f"prescreen changed {1-same_pos:.1%} of pos"
+    light_p = (np.asarray(res_p.method) == 1).mean()
+    light_s = (np.asarray(res_s.method) == 1).mean()
+    assert light_p >= light_s - 0.05, (light_p, light_s)
+    print(f"ok: prescreen_top=2 preserves mapping ({same_pos:.1%} same)")
+
+
+if __name__ == "__main__":
+    main()

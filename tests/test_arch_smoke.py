@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU).
+
+For each of the 10 assigned archs: one forward + one train-style grad step
+on a reduced config, asserting output shapes and no NaNs; plus decode
+consistency and scan-vs-unroll equivalence on representatives.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_NAMES, get_config, get_smoke_config
+from repro.models.model import (
+    decode_step, input_specs, loss_fn, make_smoke_batch, model_init_params,
+    prefill_step,
+)
+from repro.models.transformer import forward
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = get_smoke_config(name)
+    params = model_init_params(cfg, KEY)
+    batch = make_smoke_batch(cfg, 2, 32, KEY)
+    logits, aux = forward(params, cfg, batch)
+    B = 2
+    if cfg.family == "audio":
+        assert logits.shape == (B, 32, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        S = batch["tokens"].shape[1] + (
+            batch["vision_embeds"].shape[1] if "vision_embeds" in batch else 0)
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_grads_finite(name):
+    cfg = get_smoke_config(name)
+    params = model_init_params(cfg, KEY)
+    batch = make_smoke_batch(cfg, 2, 32, KEY)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{name}: NaN grad"
+    # at least one nonzero gradient
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_teacher_forcing(name):
+    cfg = get_smoke_config(name)
+    params = model_init_params(cfg, KEY)
+    B, S = 2, 16
+    if cfg.family == "audio":
+        toks = jax.random.randint(KEY, (B, S, cfg.n_codebooks), 0,
+                                  cfg.vocab_size)
+    else:
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits_full, _ = forward(params, cfg, {"tokens": toks})
+    half = S // 2
+    _, cache = prefill_step(params, {"tokens": toks[:, :half]}, cfg,
+                            max_len=S, cache_dtype=jnp.float32)
+    errs = []
+    for t in range(half, S):
+        lg, cache = decode_step(params, cache, toks[:, t : t + 1], cfg)
+        errs.append(float(jnp.abs(lg - logits_full[:, t]).max()))
+    tol = 0.02 if cfg.family in ("ssm", "hybrid") else 1e-3
+    assert max(errs) < tol, f"{name}: decode drift {max(errs)}"
+
+
+@pytest.mark.parametrize("name", ["yi-6b", "kimi-k2-1t-a32b", "mamba2-2.7b",
+                                   "zamba2-2.7b", "musicgen-medium"])
+def test_unroll_equals_scan(name):
+    """Dry-run (unrolled) execution must match the scan path bitwise-ish.
+
+    MoE archs run this in float32: top-k routing is discontinuous, so bf16
+    reduction reordering between scan and unroll flips near-tie expert
+    assignments and produces legitimately large logit deltas on ~1% of
+    tokens.  f32 removes the ties; any remaining mismatch is a real bug.
+    """
+    import dataclasses
+    cfg = get_smoke_config(name)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    params = model_init_params(cfg, KEY)
+    batch = make_smoke_batch(cfg, 2, 32, KEY)
+    l1, _ = forward(params, cfg, batch, unroll=False)
+    l2, _ = forward(params, cfg, batch, unroll=True)
+    # bf16 activations: scan vs unrolled reorder reductions.  bf16 ulp at
+    # logit magnitude ~2.5 is ~0.02; across deep stacks (MoE routing, audio
+    # codebook sums) drift up to ~0.05 on <0.5% of elements is pure numerics.
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=6e-2, rtol=6e-2)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                         "decode_32k", "long_500k"])
+def test_input_specs_well_formed(name, shape_name):
+    """Full-config specs: ShapeDtypeStructs only, no allocation."""
+    cfg = get_config(name)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        pytest.skip("long_500k only for sub-quadratic archs (DESIGN.md §5)")
+    specs = input_specs(cfg, shape)
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    assert specs["tokens"].shape[0] == shape.global_batch
+
+
+def test_vlm_vision_prefix_changes_logits():
+    cfg = get_smoke_config("qwen2-vl-7b")
+    params = model_init_params(cfg, KEY)
+    batch = make_smoke_batch(cfg, 2, 32, KEY)
+    l1, _ = forward(params, cfg, batch)
+    batch2 = dict(batch)
+    batch2["vision_embeds"] = batch["vision_embeds"] + 0.5
+    l2, _ = forward(params, cfg, batch2)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+def test_musicgen_codebook_heads_independent():
+    cfg = get_smoke_config("musicgen-medium")
+    params = model_init_params(cfg, KEY)
+    batch = make_smoke_batch(cfg, 2, 16, KEY)
+    logits, _ = forward(params, cfg, batch)
+    # heads differ (independent output projections)
+    assert float(jnp.abs(logits[..., 0, :] - logits[..., 1, :]).max()) > 1e-4

@@ -1,0 +1,106 @@
+"""Unit tests: 2-bit encoding, revcomp, packing, xxHash32 spec compliance."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.encoding import (
+    decode_to_str, encode_str, mismatch_mask_packed, pack_2bit, revcomp,
+    unpack_2bit,
+)
+from repro.core.hashing import xxhash32_words, xxhash32_words_np
+
+# ---------------------------------------------------------------------------
+# Pure-Python xxHash32 reference (spec transliteration) for 16-byte inputs.
+# ---------------------------------------------------------------------------
+P1, P2, P3, P4, P5 = 2654435761, 2246822519, 3266489917, 668265263, 374761393
+M = 0xFFFFFFFF
+
+
+def _rotl(x, r):
+    return ((x << r) | (x >> (32 - r))) & M
+
+
+def xxh32_py(data: bytes, seed: int = 0) -> int:
+    assert len(data) == 16
+    words = [int.from_bytes(data[4 * i : 4 * i + 4], "little") for i in range(4)]
+    v = [
+        (seed + P1 + P2) & M,
+        (seed + P2) & M,
+        seed & M,
+        (seed - P1) & M,
+    ]
+    for i in range(4):
+        v[i] = (_rotl((v[i] + words[i] * P2) & M, 13) * P1) & M
+    acc = (_rotl(v[0], 1) + _rotl(v[1], 7) + _rotl(v[2], 12) + _rotl(v[3], 18)) & M
+    acc = (acc + 16) & M
+    acc ^= acc >> 15
+    acc = (acc * P2) & M
+    acc ^= acc >> 13
+    acc = (acc * P3) & M
+    acc ^= acc >> 16
+    return acc
+
+
+def test_encode_decode_roundtrip():
+    s = "ACGTACGTTTGGCCAA"
+    codes = encode_str(s)
+    assert decode_to_str(codes) == s
+
+
+def test_encode_rejects_non_acgt():
+    with pytest.raises(ValueError):
+        encode_str("ACGN")
+
+
+def test_revcomp_involution():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 4, (5, 37), dtype=np.uint8))
+    assert (revcomp(revcomp(x)) == x).all()
+
+
+def test_revcomp_known():
+    # revcomp(ACGT) = ACGT (palindrome); revcomp(AAAA) = TTTT
+    assert decode_to_str(revcomp(jnp.asarray(encode_str("ACGT")))) == "ACGT"
+    assert decode_to_str(revcomp(jnp.asarray(encode_str("AAAA")))) == "TTTT"
+
+
+@pytest.mark.parametrize("L", [1, 15, 16, 17, 50, 64])
+def test_pack_unpack_roundtrip(L):
+    rng = np.random.default_rng(L)
+    x = jnp.asarray(rng.integers(0, 4, (3, L), dtype=np.uint8))
+    words = pack_2bit(x)
+    back = unpack_2bit(words, L)
+    assert (back == x).all()
+
+
+def test_mismatch_mask_packed_matches_unpacked():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 4, (4, 48), dtype=np.uint8)
+    b = a.copy()
+    b[1, 5] = (b[1, 5] + 1) % 4
+    b[3, 40] = (b[3, 40] + 2) % 4
+    wa, wb = pack_2bit(jnp.asarray(a)), pack_2bit(jnp.asarray(b))
+    mask_words = mismatch_mask_packed(wa, wb)
+    mism = unpack_2bit(mask_words, 48) != 0
+    assert (np.asarray(mism) == (a != b)).all()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 12345])
+def test_xxhash32_matches_spec(seed):
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2**32, (64, 4), dtype=np.uint64).astype(np.uint32)
+    ours = np.asarray(xxhash32_words(jnp.asarray(words), seed=seed))
+    ours_np = xxhash32_words_np(words, seed=seed)
+    for i in range(len(words)):
+        data = b"".join(int(w).to_bytes(4, "little") for w in words[i])
+        expect = xxh32_py(data, seed)
+        assert int(ours[i]) == expect
+        assert int(ours_np[i]) == expect
+
+
+def test_xxhash_jax_equals_numpy_bulk():
+    rng = np.random.default_rng(7)
+    words = rng.integers(0, 2**32, (1000, 4), dtype=np.uint64).astype(np.uint32)
+    a = np.asarray(xxhash32_words(jnp.asarray(words), seed=42))
+    b = xxhash32_words_np(words, seed=42)
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,157 @@
+"""Unit tests: SeedMap construction, query, seeding, paired-adjacency."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hashing import xxhash32_words_np
+from repro.core.pair_filter import paired_adjacency_filter
+from repro.core.query import QueryResult, merge_read_starts, query_csr, query_padded, query_read_batch
+from repro.core.seeding import extract_seeds, hash_seeds, seed_offsets, seed_read_batch
+from repro.core.seedmap import (
+    INVALID_LOC, SeedMapConfig, build_seedmap, packed_words_all_positions,
+    seedmap_stats, to_padded,
+)
+from repro.core.simulate import random_reference
+
+
+@pytest.fixture(scope="module")
+def ref():
+    return random_reference(50_000, np.random.default_rng(0))
+
+
+@pytest.fixture(scope="module")
+def sm(ref):
+    return build_seedmap(ref, SeedMapConfig(table_bits=16, max_locations=64))
+
+
+def test_packed_words_match_direct_pack(ref):
+    from repro.core.encoding import pack_2bit
+    words = packed_words_all_positions(ref[:200], 50)
+    for p in [0, 1, 17, 99, 150]:
+        direct = np.asarray(pack_2bit(jnp.asarray(ref[p : p + 50]), n_words=4))
+        np.testing.assert_array_equal(words[p], direct)
+
+
+def test_every_position_queryable(ref, sm):
+    """Each reference position's seed must be findable in the SeedMap."""
+    cfg = sm.config
+    rng = np.random.default_rng(1)
+    pos = rng.integers(0, len(ref) - cfg.seed_len, 100)
+    seeds = np.stack([ref[p : p + cfg.seed_len] for p in pos])
+    hashes = hash_seeds(jnp.asarray(seeds), hash_seed=cfg.hash_seed)
+    locs, counts = query_csr(sm, hashes, 64)
+    locs = np.asarray(locs)
+    for i, p in enumerate(pos):
+        assert p in locs[i], f"position {p} missing from its bucket"
+
+
+def test_locations_sorted_within_bucket(sm):
+    offsets = np.asarray(sm.offsets)
+    locations = np.asarray(sm.locations)
+    counts = offsets[1:] - offsets[:-1]
+    big = np.argsort(counts)[-20:]
+    for b in big:
+        seg = locations[offsets[b] : offsets[b + 1]]
+        assert (np.diff(seg) >= 0).all()
+
+
+def test_index_filter_threshold():
+    """Buckets over the threshold must be dropped (§5.2)."""
+    ref = np.tile(np.asarray([0, 1, 2, 3] * 25, np.uint8), 40)  # periodic
+    cfg = SeedMapConfig(table_bits=10, max_locations=8)
+    sm = build_seedmap(ref, cfg)
+    offsets = np.asarray(sm.offsets)
+    counts = offsets[1:] - offsets[:-1]
+    assert counts.max() <= 8
+
+
+def test_padded_layout_agrees_with_csr(ref, sm):
+    psm = to_padded(sm)
+    rng = np.random.default_rng(2)
+    pos = rng.integers(0, len(ref) - 50, 50)
+    seeds = np.stack([ref[p : p + 50] for p in pos])
+    hashes = hash_seeds(jnp.asarray(seeds))
+    locs_csr, n_csr = query_csr(sm, hashes, sm.config.padded_cap)
+    locs_pad, n_pad = query_padded(psm, hashes)
+    np.testing.assert_array_equal(np.asarray(locs_csr), np.asarray(locs_pad))
+    np.testing.assert_array_equal(np.asarray(n_csr), np.asarray(n_pad))
+
+
+def test_seed_offsets_first_middle_last():
+    offs = np.asarray(seed_offsets(150, 50, 3))
+    np.testing.assert_array_equal(offs, [0, 50, 100])
+    offs = np.asarray(seed_offsets(150, 40, 3))
+    np.testing.assert_array_equal(offs, [0, 55, 110])
+
+
+def test_extract_seeds_shapes():
+    rng = np.random.default_rng(3)
+    reads = jnp.asarray(rng.integers(0, 4, (4, 150), np.uint8))
+    seeds = extract_seeds(reads, 50, 3)
+    assert seeds.shape == (4, 3, 50)
+    np.testing.assert_array_equal(np.asarray(seeds[:, 0]), np.asarray(reads[:, :50]))
+    np.testing.assert_array_equal(np.asarray(seeds[:, 2]), np.asarray(reads[:, 100:]))
+
+
+def test_merge_read_starts_sorted_and_adjusted():
+    locs = jnp.asarray(
+        [[[100, INVALID_LOC], [160, 230], [205, INVALID_LOC]]], jnp.int32
+    )  # (1, 3 seeds, K=2)
+    offs = jnp.asarray([0, 50, 100], jnp.int32)
+    out = merge_read_starts(locs, offs)
+    starts = np.asarray(out.starts[0])
+    # adjusted: 100-0, 160-50=110, 230-50=180, 205-100=105
+    np.testing.assert_array_equal(starts[:4], [100, 105, 110, 180])
+    assert (starts[4:] == INVALID_LOC).all()
+    assert int(out.n_hits[0]) == 4
+
+
+def test_exact_read_maps_to_true_position(ref, sm):
+    rng = np.random.default_rng(4)
+    for _ in range(10):
+        p = int(rng.integers(0, len(ref) - 150))
+        read = jnp.asarray(ref[p : p + 150])[None]
+        seeds = seed_read_batch(read, 50, 3)
+        q = query_read_batch(sm, seeds, 32)
+        starts = np.asarray(q.starts[0])
+        assert (starts == p).sum() >= 1
+
+
+def test_paired_adjacency_basic():
+    B, M = 2, 8
+    s1 = np.full((B, M), INVALID_LOC, np.int32)
+    s2 = np.full((B, M), INVALID_LOC, np.int32)
+    # pair 0: hit at (1000, 1200) within delta=500; distractor at 90000
+    s1[0, :3] = [1000, 5000, 90000]
+    s2[0, :2] = [1200, 40000]
+    # pair 1: nothing within delta
+    s1[1, :2] = [100, 900000]
+    s2[1, :1] = [700000]
+    s1.sort(axis=1)
+    s2.sort(axis=1)
+    q1 = QueryResult(starts=jnp.asarray(s1), n_hits=jnp.asarray([3, 2]))
+    q2 = QueryResult(starts=jnp.asarray(s2), n_hits=jnp.asarray([2, 1]))
+    out = paired_adjacency_filter(q1, q2, delta=500, max_candidates=4)
+    assert int(out.n[0]) == 1
+    assert int(out.pos1[0, 0]) == 1000 and int(out.pos2[0, 0]) == 1200
+    assert int(out.n[1]) == 0
+    assert (np.asarray(out.pos1[1]) == INVALID_LOC).all()
+
+
+def test_paired_adjacency_dedup():
+    """The same read-start found via several seeds must yield one candidate."""
+    B, M = 1, 8
+    s1 = np.full((B, M), INVALID_LOC, np.int32)
+    s2 = np.full((B, M), INVALID_LOC, np.int32)
+    s1[0, :3] = [1000, 1000, 1000]
+    s2[0, :1] = [1100]
+    q1 = QueryResult(starts=jnp.asarray(s1), n_hits=jnp.asarray([3]))
+    q2 = QueryResult(starts=jnp.asarray(s2), n_hits=jnp.asarray([1]))
+    out = paired_adjacency_filter(q1, q2, delta=500, max_candidates=4)
+    assert int(out.n[0]) == 1
+
+
+def test_seedmap_stats(sm):
+    st = seedmap_stats(sm)
+    assert st["n_locations"] > 0
+    assert st["mean_locs_per_nonempty_bucket"] >= 1.0

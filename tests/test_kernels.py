@@ -1,0 +1,155 @@
+"""Per-kernel tests: interpret-mode Pallas vs pure-jnp oracle, with
+shape/dtype sweeps as required for every kernel."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.light_align import light_align as light_align_jnp
+from repro.core.scoring import Scoring
+from repro.kernels.banded_sw.ops import banded_sw
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.light_align.ops import light_align as light_align_op
+from repro.kernels.seed_gather.ops import seed_gather
+from repro.kernels.xxhash.ops import xxhash32
+from repro.kernels.xxhash.ref import xxhash32_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------- xxhash --
+@pytest.mark.parametrize("n", [1, 127, 128, 1000])
+@pytest.mark.parametrize("seed", [0, 99])
+def test_xxhash_kernel_sweep(n, seed):
+    w = jnp.asarray(
+        RNG.integers(0, 2**32, (n, 4), dtype=np.uint64).astype(np.uint32))
+    out = xxhash32(w, seed=seed, backend="interpret", block=128)
+    ref = xxhash32_ref(w, seed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_xxhash_kernel_multidim():
+    w = jnp.asarray(
+        RNG.integers(0, 2**32, (6, 3, 4), dtype=np.uint64).astype(np.uint32))
+    out = xxhash32(w, backend="interpret", block=128)
+    ref = xxhash32_ref(w, 0)
+    assert out.shape == (6, 3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ----------------------------------------------------------- light_align --
+def _mk_la(b, r, e, rng, plant=True):
+    read = rng.integers(0, 4, (b, r), np.uint8)
+    win = rng.integers(0, 4, (b, r + 2 * e), np.uint8)
+    if plant:
+        # half the batch: exact match; quarter: one indel
+        h = b // 2
+        win[:h, e : e + r] = read[:h]
+        for i in range(h, h + b // 4):
+            k = rng.integers(1, min(e, 5) + 1)
+            p = rng.integers(1, r - k - 1)
+            win[i, e : e + p] = read[i, :p]
+            win[i, e + p + k : e + r + k] = read[i, p:]
+    return jnp.asarray(read), jnp.asarray(win)
+
+
+@pytest.mark.parametrize("b,r,e", [(8, 150, 8), (33, 150, 4), (64, 100, 8),
+                                    (128, 150, 2), (16, 64, 6)])
+@pytest.mark.parametrize("mode", ["minsplit", "paper"])
+def test_light_align_kernel_sweep(b, r, e, mode):
+    rng = np.random.default_rng(b * 1000 + r + e)
+    read, win = _mk_la(b, r, e, rng)
+    got = light_align_op(read, win, e, mode=mode, backend="interpret",
+                         block=32)
+    ref = light_align_jnp(read, win, e, mode=mode)
+    for f in got._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f"field {f} b={b} r={r} e={e} mode={mode}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint8, jnp.int32])
+def test_light_align_kernel_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    read, win = _mk_la(16, 150, 8, rng)
+    got = light_align_op(read.astype(dtype), win.astype(dtype), 8,
+                         backend="interpret", block=16)
+    ref = light_align_jnp(read, win, 8)
+    np.testing.assert_array_equal(np.asarray(got.score), np.asarray(ref.score))
+
+
+# ------------------------------------------------------------- banded_sw --
+@pytest.mark.parametrize("b,r,w", [(8, 150, 182), (32, 100, 132),
+                                    (7, 150, 182), (64, 50, 80)])
+def test_banded_sw_kernel_sweep(b, r, w):
+    rng = np.random.default_rng(b + r + w)
+    read = jnp.asarray(rng.integers(0, 4, (b, r), np.uint8))
+    win = jnp.asarray(rng.integers(0, 4, (b, w), np.uint8))
+    got = banded_sw(read, win, backend="interpret", block=8)
+    ref = gotoh_semiglobal(read.astype(jnp.int32), win.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got.score), np.asarray(ref.score))
+    np.testing.assert_array_equal(np.asarray(got.ref_end),
+                                  np.asarray(ref.ref_end))
+
+
+def test_banded_sw_kernel_known_scores():
+    rng = np.random.default_rng(9)
+    sc = Scoring()
+    E = 16
+    ref_seq = rng.integers(0, 4, (1, 150 + 2 * E), np.uint8)
+    read = ref_seq[:, E:E + 150].copy()
+    got = banded_sw(jnp.asarray(read), jnp.asarray(ref_seq),
+                    backend="interpret", block=1)
+    assert int(got.score[0]) == 300
+
+
+# ------------------------------------------------------------ seed_gather --
+@pytest.mark.parametrize("t,cap,n", [(64, 16, 40), (128, 32, 128),
+                                      (16, 8, 3)])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_seed_gather_kernel_sweep(t, cap, n, dtype):
+    rng = np.random.default_rng(t + cap + n)
+    table = jnp.asarray(rng.integers(0, 1000, (t, cap)).astype(dtype))
+    ids = jnp.asarray(rng.integers(0, t, n).astype(np.int32))
+    got = seed_gather(table, ids, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(table[ids]))
+
+
+# -------------------------------------------------------- flash_attention --
+@pytest.mark.parametrize("bh,s,d", [(2, 128, 64), (4, 256, 64), (1, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kernel_sweep(bh, s, d, causal):
+    rng = np.random.default_rng(bh * s + d)
+    q = jnp.asarray(rng.normal(size=(bh, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(bh, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(bh, s, d)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, backend="interpret",
+                          block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, backend="interpret")
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        atol=3e-2, rtol=3e-2)
+
+
+def test_flash_attention_unaligned_seq():
+    """S not a multiple of the block: wrapper pads, result matches."""
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(2, 200, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 200, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 200, 64)).astype(np.float32))
+    got = flash_attention(q, k, v, backend="interpret")
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

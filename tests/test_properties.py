@@ -1,0 +1,139 @@
+"""Hypothesis property tests for system invariants.
+
+  P1  Light Alignment never beats the optimal DP (Gotoh) score, and
+      equals it whenever it accepts (minsplit's accept set is exact).
+  P2  Paired-Adjacency candidates always satisfy the Δ constraint.
+  P3  SeedMap query returns exactly the reference's true occurrence list
+      for any seed below the cap (no phantom/dropped locations besides
+      hash-bucket collisions, which only ADD candidates).
+  P4  merge_read_starts output is sorted with INVALID_LOC padding last.
+  P5  Checkpoint save/restore is an identity for arbitrary pytrees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PipelineConfig, Scoring, SeedMapConfig, build_seedmap, light_align,
+)
+from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.pair_filter import paired_adjacency_filter
+from repro.core.query import QueryResult, merge_read_starts, query_csr
+from repro.core.seeding import hash_seeds
+from repro.core.seedmap import INVALID_LOC
+
+SC = Scoring()
+
+
+@st.composite
+def read_and_window(draw, R=64, E=4):
+    """A read derived from a window with random edits."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    win = rng.integers(0, 4, R + 2 * E, dtype=np.uint8)
+    read = win[E : E + R].copy()
+    n_edit = draw(st.integers(0, 3))
+    for _ in range(n_edit):
+        kind = draw(st.sampled_from(["sub", "del", "ins"]))
+        p = draw(st.integers(4, R - 8))
+        if kind == "sub":
+            read[p] = (read[p] + draw(st.integers(1, 3))) % 4
+        elif kind == "del":
+            read = np.concatenate([read[:p], read[p + 1 :],
+                                   rng.integers(0, 4, 1, dtype=np.uint8)])
+        else:
+            read = np.concatenate([read[:p],
+                                   rng.integers(0, 4, 1, dtype=np.uint8),
+                                   read[:R]])[:R]
+    return read.astype(np.uint8), win
+
+
+@given(read_and_window())
+@settings(max_examples=40, deadline=None)
+def test_p1_light_never_beats_gotoh(rw):
+    read, win = rw
+    E = 4
+    lr = light_align(jnp.asarray(read[None]), jnp.asarray(win[None]), E, SC,
+                     threshold=0, mode="minsplit")
+    dp = gotoh_semiglobal(jnp.asarray(read[None]), jnp.asarray(win[None]),
+                          SC)
+    assert int(lr.score[0]) <= int(dp.score[0]), \
+        f"light {int(lr.score[0])} > gotoh {int(dp.score[0])}"
+
+
+@given(st.integers(0, 2**31), st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_p2_adjacency_candidates_within_delta(seed, delta_scale):
+    rng = np.random.default_rng(seed)
+    delta = 50 * delta_scale
+    M = 16
+    s1 = np.sort(rng.integers(0, 10_000, M)).astype(np.int32)
+    s2 = np.sort(rng.integers(0, 10_000, M)).astype(np.int32)
+    q1 = QueryResult(starts=jnp.asarray(s1[None]),
+                     n_hits=jnp.asarray([M], jnp.int32))
+    q2 = QueryResult(starts=jnp.asarray(s2[None]),
+                     n_hits=jnp.asarray([M], jnp.int32))
+    cands = paired_adjacency_filter(q1, q2, delta, 8)
+    p1 = np.asarray(cands.pos1[0])
+    p2 = np.asarray(cands.pos2[0])
+    ok = p1 != INVALID_LOC
+    assert (np.abs(p1[ok].astype(np.int64)
+                   - p2[ok].astype(np.int64)) <= delta).all()
+    # completeness on the kept prefix: if any in-range pair exists,
+    # at least one candidate must survive
+    any_pair = (np.abs(s1[:, None].astype(np.int64)
+                       - s2[None, :].astype(np.int64)) <= delta).any()
+    assert bool(cands.n[0] > 0) == bool(any_pair) or bool(cands.n[0] > 0)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_p3_query_returns_true_occurrences(seed):
+    rng = np.random.default_rng(seed)
+    # reference with a planted repeated 50-mer
+    ref = rng.integers(0, 4, 4000, dtype=np.uint8)
+    motif = ref[100:150].copy()
+    sites = [100, 700, 1900]
+    for s in sites[1:]:
+        ref[s : s + 50] = motif
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=14))
+    h = hash_seeds(jnp.asarray(motif[None]), 0)
+    locs, count = query_csr(sm, h, 16)
+    got = set(np.asarray(locs).ravel().tolist()) - {int(INVALID_LOC)}
+    assert set(sites) <= got, (sorted(got), sites)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_p4_merge_sorted_invalid_last(seed):
+    rng = np.random.default_rng(seed)
+    locs = rng.integers(0, 1000, (2, 3, 4)).astype(np.int32)
+    mask = rng.random((2, 3, 4)) < 0.3
+    locs[mask] = INVALID_LOC
+    out = merge_read_starts(jnp.asarray(locs),
+                            jnp.asarray([0, 5, 10], jnp.int32))
+    s = np.asarray(out.starts)
+    assert (np.diff(s, axis=-1) >= 0).all()
+    for b in range(2):
+        row = s[b]
+        n = int(out.n_hits[b])
+        assert (row[n:] == INVALID_LOC).all()
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_p5_checkpoint_identity(seed, depth):
+    from repro.checkpoint import Checkpointer
+    import tempfile
+    rng = np.random.default_rng(seed)
+    tree = {"a": rng.normal(size=(3, 5)).astype(np.float32)}
+    node = tree
+    for i in range(depth):
+        node["nest"] = {"x": rng.integers(0, 100, (2,)).astype(np.int32)}
+        node = node["nest"]
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(1, tree)
+        out = ck.restore(1, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+        jax.tree.map(np.testing.assert_array_equal, tree, out)

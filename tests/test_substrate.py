@@ -1,0 +1,223 @@
+"""Unit + property tests for the substrate: checkpointer, watchdog,
+elastic re-mesh, gradient compression, schedules."""
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.optim.compress import CompressConfig, compress, init_state
+from repro.optim.schedules import warmup_cosine
+from repro.runtime import (
+    DEGRADED, EVICT, HEALTHY, Watchdog, WatchdogConfig, plan_remesh,
+)
+
+
+# ----------------------------------------------------------- checkpoint ----
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.normal(size=(8, 16)).astype(np.float32),
+                   "b": rng.normal(size=(16,)).astype(np.float32)},
+        "opt": [np.int32(3), rng.normal(size=(4, 4)).astype(np.float32)],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(5, t, extra={"loss": 1.25})
+    assert ck.latest_step() == 5
+    spec = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    out = ck.restore(5, spec)
+    jax.tree.map(np.testing.assert_array_equal, t, out)
+    assert ck.restore_extra(5)["loss"] == 1.25
+
+
+def test_checkpoint_atomicity_uncommitted_invisible(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    # simulate a crash mid-save: step dir exists but no COMMIT marker
+    os.makedirs(str(tmp_path / "step_0000000002"))
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_gc_keeps_last_n(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+
+
+def test_checkpoint_keep_every(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=1, keep_every=2)
+    for s in (1, 2, 3):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [2, 3]  # 2 kept by keep_every, 3 by keep
+
+
+def test_checkpoint_async_overlaps_and_commits(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save_async(7, t)
+    ck.wait()
+    assert ck.latest_step() == 7
+    out = ck.restore(7, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+    jax.tree.map(np.testing.assert_array_equal, t, out)
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    """Save replicated, restore sharded across a 1-device mesh slice."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    ck = Checkpointer(str(tmp_path))
+    t = {"w": np.arange(32, dtype=np.float32).reshape(4, 8)}
+    ck.save(1, t)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    spec = {"w": jax.ShapeDtypeStruct((4, 8), np.float32)}
+    out = ck.restore(1, spec, sh)
+    assert out["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(out["w"]), t["w"])
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": np.zeros((2, 2), np.float32)})
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(1, {"w": jax.ShapeDtypeStruct((3, 2), np.float32)})
+
+
+# -------------------------------------------------------------- watchdog ---
+def test_watchdog_stays_healthy_on_uniform_steps():
+    dog = Watchdog()
+    for _ in range(50):
+        assert dog.observe(1.0) == HEALTHY
+
+
+def test_watchdog_degrades_then_evicts():
+    cfg = WatchdogConfig(patience=3, evict_patience=3, warmup_steps=2)
+    dog = Watchdog(cfg)
+    for _ in range(10):
+        dog.observe(1.0)
+    states = [dog.observe(5.0) for _ in range(6)]
+    assert states[2] == DEGRADED
+    assert states[-1] == EVICT
+
+
+def test_watchdog_recovers():
+    cfg = WatchdogConfig(patience=2, evict_patience=100, warmup_steps=2,
+                         recovery=3)
+    dog = Watchdog(cfg)
+    for _ in range(10):
+        dog.observe(1.0)
+    for _ in range(2):
+        dog.observe(9.0)
+    assert dog.state == DEGRADED
+    for _ in range(3):
+        dog.observe(1.0)
+    assert dog.state == HEALTHY
+
+
+def test_watchdog_stragglers_do_not_poison_ema():
+    dog = Watchdog(WatchdogConfig(warmup_steps=2))
+    for _ in range(10):
+        dog.observe(1.0)
+    ema_before = dog.ema
+    dog.observe(100.0)  # straggler step must not fold into the EMA
+    assert dog.ema == ema_before
+
+
+# ---------------------------------------------------------------- elastic --
+def test_remesh_no_failure_is_identity():
+    p = plan_remesh(256, 0, model=16)
+    assert p.shape == (16, 16) and p.dropped == 0 and p.grad_accum == 1
+
+
+def test_remesh_single_host_failure():
+    # 256 chips, 8 fail -> largest (data, model=16) mesh = 15*16=240
+    p = plan_remesh(256, 8, model=16)
+    assert p.shape[1] == 16  # TP extent preserved
+    assert p.n_devices <= 248
+    assert p.n_devices == p.shape[0] * p.shape[1]
+    # global batch preserved via grad accumulation
+    assert p.grad_accum * p.shape[0] >= 16
+
+
+def test_remesh_catastrophic_keeps_running():
+    p = plan_remesh(256, 250, model=16)  # 6 survivors
+    assert p.n_devices >= 4
+    assert p.shape[-1] <= 6
+
+
+@given(st.integers(1, 255))
+@settings(max_examples=50, deadline=None)
+def test_remesh_always_valid(n_failed):
+    p = plan_remesh(256, n_failed, model=16)
+    assert 1 <= p.n_devices <= 256 - n_failed
+    size = 1
+    for s in p.shape:
+        size *= s
+    assert size == p.n_devices
+    assert p.grad_accum >= 1
+
+
+def test_build_mesh_on_cpu():
+    from repro.runtime import build_mesh
+    p = plan_remesh(len(jax.devices()), 0, model=1)
+    mesh = build_mesh(p)
+    assert mesh.devices.size == p.n_devices
+
+
+# ------------------------------------------------------------- compress ----
+@pytest.mark.parametrize("codec", ["none", "bf16", "int8"])
+def test_compress_roundtrip_error_bounds(codec):
+    rng = np.random.default_rng(0)
+    grads = {"a": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(17,)).astype(np.float32))}
+    cfg = CompressConfig(codec=codec)
+    state = init_state(grads, cfg)
+    wire, state, dec = compress(grads, state, cfg)
+    out = dec(wire)
+    for k in grads:
+        err = np.abs(np.asarray(out[k]) - np.asarray(grads[k])).max()
+        scale = np.abs(np.asarray(grads[k])).max()
+        tol = {"none": 0.0, "bf16": 0.01 * scale, "int8": scale / 100}[codec]
+        assert err <= tol + 1e-12
+
+
+def test_int8_error_feedback_reduces_bias():
+    """With error feedback, the *sum* of decoded grads tracks the true sum."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32) * 1e-3)
+    cfg_fb = CompressConfig(codec="int8", error_feedback=True)
+    state = init_state({"g": g}, cfg_fb)
+    total = np.zeros(256, np.float32)
+    for _ in range(50):
+        wire, state, dec = compress({"g": g}, state, cfg_fb)
+        total += np.asarray(dec(wire)["g"])
+    err_fb = np.abs(total - 50 * np.asarray(g)).mean()
+    # without feedback the same tiny grad can quantize to zero forever
+    cfg_nf = CompressConfig(codec="int8", error_feedback=False)
+    state = init_state({"g": g}, cfg_nf)
+    total_nf = np.zeros(256, np.float32)
+    for _ in range(50):
+        wire, state, dec = compress({"g": g}, state, cfg_nf)
+        total_nf += np.asarray(dec(wire)["g"])
+    err_nf = np.abs(total_nf - 50 * np.asarray(g)).mean()
+    assert err_fb <= err_nf
+
+
+# ------------------------------------------------------------- schedules ---
+def test_warmup_cosine_shape():
+    lr = [float(warmup_cosine(jnp.int32(s), peak_lr=1.0, warmup_steps=10,
+                              total_steps=100)) for s in range(101)]
+    assert lr[0] == 0.0
+    assert lr[10] == pytest.approx(1.0)
+    assert lr[100] == pytest.approx(0.1, abs=1e-6)
+    assert all(a >= b - 1e-9 for a, b in zip(lr[10:], lr[11:]))  # decreasing
