@@ -1,0 +1,92 @@
+"""Fused vs unfused candidate light-alignment across (B, C) sweeps.
+
+The unfused baseline is the seed repo's step-4 hot path: materialize the
+full `(B, C, R+2E)` window tensor in HBM, light-align the `B*C` reshape
+per mate, then argmax the pair score.  The fused path is one
+`candidate_pair_align` call (backend="auto": the Pallas kernel on TPU,
+the jnp oracle elsewhere — on CPU the two paths compute identical programs,
+so the ratio approaches 1; the HBM-traffic win shows up on TPU).
+
+Derived columns: window tensor bytes the unfused path materializes per
+mate, and the fused/unfused speedup.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, world
+from repro.core.light_align import gather_ref_windows, light_align
+from repro.core.pipeline import PipelineConfig
+from repro.core.seedmap import INVALID_LOC
+from repro.kernels.candidate_align import candidate_pair_align
+
+R, E = 150, 8
+SWEEPS = [(256, 4), (256, 8), (1024, 8), (4096, 8)]
+
+
+def _candidates(ref_len, b, c, rng):
+    pos1 = rng.integers(E, ref_len - R - E, (b, c)).astype(np.int32)
+    pos2 = np.clip(pos1 + rng.integers(-300, 300, (b, c)),
+                   E, ref_len - R - E).astype(np.int32)
+    inval = rng.random((b, c)) < 0.25
+    pos1[inval] = INVALID_LOC
+    pos2[inval] = INVALID_LOC
+    return jnp.asarray(pos1), jnp.asarray(pos2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _unfused(ref, reads1, reads2, pos1, pos2, cfg):
+    """Seed-repo math: per-mate window materialization + argmax outside."""
+    def best(reads, starts):
+        B, C = starts.shape
+        valid = starts != INVALID_LOC
+        safe = jnp.where(valid, starts, 0)
+        wins = gather_ref_windows(ref, safe, R, cfg.max_gap)
+        reads_t = jnp.broadcast_to(reads[:, None, :], (B, C, R))
+        res = light_align(reads_t.reshape(B * C, R), wins.reshape(B * C, -1),
+                          cfg.max_gap, cfg.scoring, cfg.threshold(),
+                          cfg.light_mode)
+        return jnp.where(valid.reshape(-1), res.score,
+                         -(1 << 20)).reshape(B, C)
+
+    sc1 = best(reads1, pos1)
+    sc2 = best(reads2, pos2)
+    bi = jnp.argmax(sc1 + sc2, axis=-1)
+    return (jnp.take_along_axis(pos1, bi[:, None], 1)[:, 0],
+            jnp.take_along_axis(sc1 + sc2, bi[:, None], 1)[:, 0])
+
+
+def run() -> list[dict]:
+    ref, _, ref_j = world(300_000)
+    cfg = PipelineConfig()
+    rng = np.random.default_rng(0)
+    rows = []
+    for B, C in SWEEPS:
+        reads1 = jnp.asarray(rng.integers(0, 4, (B, R), dtype=np.uint8))
+        reads2 = jnp.asarray(rng.integers(0, 4, (B, R), dtype=np.uint8))
+        pos1, pos2 = _candidates(len(ref), B, C, rng)
+
+        us_unfused = time_fn(
+            lambda: _unfused(ref_j, reads1, reads2, pos1, pos2, cfg))
+        us_fused = time_fn(
+            lambda: candidate_pair_align(
+                ref_j, reads1, reads2, pos1, pos2, cfg.max_gap,
+                scoring=cfg.scoring, threshold=cfg.threshold(),
+                mode=cfg.light_mode, backend="auto"))
+        hbm_mb = B * C * (R + 2 * E) / 1e6  # uint8 window tensor per mate
+        rows.append(row(
+            f"cand_align_unfused_B{B}_C{C}", us_unfused,
+            window_mb_per_mate=round(hbm_mb, 2)))
+        rows.append(row(
+            f"cand_align_fused_B{B}_C{C}", us_fused,
+            speedup=round(us_unfused / max(us_fused, 1e-9), 3)))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -29,6 +29,7 @@ MODULES = [
     ("table7", "benchmarks.bench_table7_accuracy"),
     ("longread", "benchmarks.bench_longread"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("cand_align", "benchmarks.bench_candidate_align"),
 ]
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")

@@ -1,0 +1,13 @@
+"""Version compatibility shims for moved/renamed jax APIs.
+
+Keep each shim tiny and in one place so call sites stay clean.  Mesh
+axis-type compatibility lives in `repro.launch.mesh.auto_axis_kwargs`.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # older jax: pre-promotion location
+    from jax.experimental.shard_map import shard_map  # noqa: F401

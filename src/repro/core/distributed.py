@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.pipeline import PipelineConfig, map_pairs
 from repro.core.query import QueryResult, merge_read_starts
 from repro.core.seedmap import INVALID_LOC, SeedMap, SeedMapConfig
@@ -112,7 +113,7 @@ def make_sharded_query(mesh: Mesh, model_axis: str = "model",
                  seed_offsets: jnp.ndarray, K: int) -> QueryResult:
         cfg = ssm.config
         batch_spec = P(batch_axes)
-        fn = jax.shard_map(
+        fn = shard_map(
             functools.partial(_inner, K=K, cfg=cfg),
             mesh=mesh,
             in_specs=(P(model_axis), P(model_axis), batch_spec),

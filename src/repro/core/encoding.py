@@ -84,6 +84,22 @@ def mismatch_bools(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return a != b
 
 
+def packed_gather_coords(n_ref_words: int, length: int) -> tuple[int, int]:
+    """(n_words, start clamp hi) for a `length`-base packed-window gather.
+
+    Single source of truth for the word-count and scalar-clamp formulas,
+    shared by `gather_windows_packed` and the candidate_align kernel's DMA
+    planning (which must mirror this gather bit-for-bit).
+    """
+    n_words = length // BASES_PER_WORD + 2
+    # int32 positions address <=2^31-1 bases: at full-genome scale (3.1 Gbp)
+    # real coordinates are per-chromosome (chrom, int32 offset) as in the
+    # paper; the dry-run's flattened coordinate space clamps the gather
+    # bound so the jitted scalar stays in int32 range.
+    hi = min(n_ref_words * BASES_PER_WORD - length - 1, 2**31 - 1)
+    return n_words, hi
+
+
 def gather_windows_packed(ref_words: jnp.ndarray, starts: jnp.ndarray,
                           length: int) -> jnp.ndarray:
     """Gather base windows from a 2-bit packed reference.
@@ -96,12 +112,7 @@ def gather_windows_packed(ref_words: jnp.ndarray, starts: jnp.ndarray,
     (775 MB instead of 3.1 GB), mirroring the paper's 2-bit SRAM encoding.
     """
     Lw = ref_words.shape[0]
-    n_words = length // BASES_PER_WORD + 2
-    # int32 positions address <=2^31-1 bases: at full-genome scale (3.1 Gbp)
-    # real coordinates are per-chromosome (chrom, int32 offset) as in the
-    # paper; the dry-run's flattened coordinate space clamps the gather
-    # bound so the jitted scalar stays in int32 range.
-    hi = min(Lw * BASES_PER_WORD - length - 1, 2**31 - 1)
+    n_words, hi = packed_gather_coords(Lw, length)
     starts = jnp.clip(starts, 0, hi)
     w0 = starts // BASES_PER_WORD
     off = (starts % BASES_PER_WORD).astype(jnp.int32)

@@ -21,11 +21,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.distributed import ShardedSeedMap, _local_query
 from repro.core.dp_fallback import gotoh_semiglobal
 from repro.core.encoding import gather_windows_packed
-from repro.core.light_align import cigar_ops, light_align
 from repro.core.pair_filter import paired_adjacency_filter
+from repro.kernels.candidate_align.ops import candidate_pair_align
 from repro.core.pipeline import (
     M_DP, M_DP_OVERFLOW, M_LIGHT, M_RESIDUAL_FULL, M_UNMAPPED, MapResult,
     PipelineConfig,
@@ -88,7 +89,7 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
             sid = jax.lax.axis_index(model_axis)
             locs, _ = _local_query(off[0], loc[0], sid, h, sm_cfg, K)
             return jax.lax.pmin(locs, model_axis)
-        return jax.shard_map(
+        return shard_map(
             inner, mesh=mesh,
             in_specs=(P(model_axis), P(model_axis), P(batch_axes)),
             out_specs=P(batch_axes),
@@ -111,63 +112,18 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
                                         cfg.max_candidates)
         passed = cands.n > 0
 
-        E = cfg.max_gap
-        valid_c = cands.pos1 != INVALID_LOC
-
-        def windows_for(starts):
-            safe = jnp.where(starts != INVALID_LOC, starts - E, 0)
-            return gather_windows_packed(ref_words, safe, R + 2 * E)
-
-        wins1 = windows_for(cands.pos1)            # (B, C, R+2E)
-        wins2 = windows_for(cands.pos2)
-        pos1s, pos2s = cands.pos1, cands.pos2
-        if 0 < cfg.prescreen_top < cfg.max_candidates:
-            # §Perf G2: one zero-shift Hamming count per candidate *pair*
-            # (the XOR compare the paper's hardware does in one cycle),
-            # then full shifted-mask alignment only on the top P pairs.
-            # Pairing is preserved: both mates are ranked jointly.
-            P = cfg.prescreen_top
-            mm0 = (jnp.sum(wins1[..., E:E + R] != reads1[:, None, :], -1)
-                   + jnp.sum(wins2[..., E:E + R]
-                             != reads2_fwd[:, None, :], -1)).astype(
-                jnp.int32)
-            mm0 = jnp.where(valid_c, mm0, 1 << 20)
-            _, top = jax.lax.top_k(-mm0, P)        # (B, P)
-            wins1 = jnp.take_along_axis(wins1, top[..., None], 1)
-            wins2 = jnp.take_along_axis(wins2, top[..., None], 1)
-            pos1s = jnp.take_along_axis(cands.pos1, top, 1)
-            pos2s = jnp.take_along_axis(cands.pos2, top, 1)
-            valid_c = jnp.take_along_axis(valid_c, top, 1)
-
-        C = pos1s.shape[1]
-
-        def run_light(reads, wins):
-            res = light_align(
-                jnp.broadcast_to(reads[:, None], (B, C, R)).reshape(-1, R),
-                wins.reshape(B * C, -1), E, cfg.scoring,
-                cfg.threshold(), cfg.light_mode)
-            sc = jnp.where(valid_c.reshape(-1), res.score,
-                           -(1 << 20)).reshape(B, C)
-            return res, sc
-
-        res1, sc1 = run_light(reads1, wins1)
-        res2, sc2 = run_light(reads2_fwd, wins2)
-        best = jnp.argmax(sc1 + sc2, axis=-1)
-
-        def takec(x):
-            x = x.reshape((B, C) + x.shape[1:])
-            return jnp.take_along_axis(
-                x, best.reshape((B, 1) + (1,) * (x.ndim - 2)), 1)[:, 0]
-
-        b_pos1 = jnp.take_along_axis(pos1s, best[:, None], 1)[:, 0]
-        b_pos2 = jnp.take_along_axis(pos2s, best[:, None], 1)[:, 0]
-        b_sc1 = jnp.take_along_axis(sc1, best[:, None], 1)[:, 0]
-        b_sc2 = jnp.take_along_axis(sc2, best[:, None], 1)[:, 0]
-        ok1 = takec(res1.ok[:, None])[:, 0] & (b_pos1 != INVALID_LOC)
-        ok2 = takec(res2.ok[:, None])[:, 0] & (b_pos2 != INVALID_LOC)
-        light_ok = passed & ok1 & ok2
-        cig1 = takec(cigar_ops(res1, R))
-        cig2 = takec(cigar_ops(res2, R))
+        # Fused step 4: packed-window gather + G2 prescreen + Light
+        # Alignment + best-pair reduction in one op (the kernel backends
+        # stream 2-bit words straight from HBM, no (B, C, R+2E) tensor).
+        pair = candidate_pair_align(
+            ref_words, reads1, reads2_fwd, cands.pos1, cands.pos2,
+            cfg.max_gap, scoring=cfg.scoring, threshold=cfg.threshold(),
+            mode=cfg.light_mode, prescreen_top=cfg.prescreen_top,
+            packed_ref=True, backend=cfg.light_backend)
+        b_pos1, b_pos2 = pair.pos1, pair.pos2
+        b_sc1, b_sc2 = pair.score1, pair.score2
+        light_ok = passed & pair.ok1 & pair.ok2
+        cig1, cig2 = pair.cigar1, pair.cigar2
 
         # fixed-capacity DP residual
         needs_dp = passed & ~light_ok

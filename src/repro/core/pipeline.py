@@ -29,11 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.light_align import (
-    cigar_ops,
-    gather_ref_windows,
-    light_align,
-)
+from repro.core.light_align import gather_ref_windows
 from repro.core.dp_fallback import gotoh_semiglobal
 from repro.core.pair_filter import CandidateSet, paired_adjacency_filter
 from repro.core.query import query_read_batch
@@ -64,6 +60,9 @@ class PipelineConfig:
     # full shifted-mask alignment only on the best `prescreen_top`.
     # 0 disables (paper-faithful baseline: align every candidate).
     prescreen_top: int = 0
+    # Backend for the fused candidate light-alignment op ("auto" resolves
+    # to the Pallas kernel on TPU, the bit-exact jnp oracle elsewhere).
+    light_backend: str = "auto"
 
     def threshold(self) -> int:
         if self.accept_threshold is not None:
@@ -104,27 +103,29 @@ def stage_stats(res: MapResult) -> dict:
 
 def _best_candidate_light(
     ref: jnp.ndarray,
-    reads: jnp.ndarray,        # (B, R) in reference orientation
-    starts: jnp.ndarray,       # (B, C) candidate read-start positions
+    reads1: jnp.ndarray,       # (B, R) mate 1, reference orientation
+    reads2: jnp.ndarray,       # (B, R) mate 2, reference orientation
+    cands: CandidateSet,
     cfg: PipelineConfig,
 ):
-    """Light-align every candidate, return best per row."""
-    B, C = starts.shape
-    R = cfg.read_len
-    valid = starts != INVALID_LOC
-    safe = jnp.where(valid, starts, 0)
-    wins = gather_ref_windows(ref, safe, R, cfg.max_gap)  # (B, C, R+2E)
-    reads_t = jnp.broadcast_to(reads[:, None, :], (B, C, R))
-    res = light_align(
-        reads_t.reshape(B * C, R),
-        wins.reshape(B * C, -1),
-        cfg.max_gap,
-        cfg.scoring,
-        cfg.threshold(),
-        cfg.light_mode,
+    """Fused step 4: gather + Light Alignment + best-pair reduction.
+
+    One `candidate_pair_align` call replaces the per-mate window
+    materialization and the post-hoc argmax/gather — the `(B, C, R+2E)`
+    window tensor never reaches HBM on the kernel backends.
+    """
+    # Imported at call time: kernels.candidate_align depends on core
+    # submodules, and `repro.core`'s package __init__ pulls in this module,
+    # so a module-level import here would be circular when the kernel
+    # package is imported first.
+    from repro.kernels.candidate_align.ops import candidate_pair_align
+
+    return candidate_pair_align(
+        ref, reads1, reads2, cands.pos1, cands.pos2, cfg.max_gap,
+        scoring=cfg.scoring, threshold=cfg.threshold(), mode=cfg.light_mode,
+        prescreen_top=cfg.prescreen_top, packed_ref=False,
+        backend=cfg.light_backend,
     )
-    score = jnp.where(valid.reshape(-1), res.score, -(1 << 20)).reshape(B, C)
-    return res, score, valid
 
 
 class _Seeded(NamedTuple):
@@ -160,28 +161,12 @@ def map_pairs(
     )
     passed = cands.n > 0
 
-    # -- 4. Light Alignment over candidates ------------------------------
-    res1, sc1, v1 = _best_candidate_light(ref, reads1, cands.pos1, cfg)
-    res2, sc2, v2 = _best_candidate_light(ref, reads2_fwd, cands.pos2, cfg)
-    pair_score = sc1 + sc2
-    best = jnp.argmax(pair_score, axis=-1)  # (B,)
-    C = cfg.max_candidates
-
-    def take(x, shaped=None):
-        x = x.reshape((B, C) + x.shape[1:])
-        return jnp.take_along_axis(
-            x, best.reshape((B, 1) + (1,) * (x.ndim - 2)), axis=1
-        )[:, 0]
-
-    b_pos1 = jnp.take_along_axis(cands.pos1, best[:, None], 1)[:, 0]
-    b_pos2 = jnp.take_along_axis(cands.pos2, best[:, None], 1)[:, 0]
-    b_sc1 = jnp.take_along_axis(sc1, best[:, None], 1)[:, 0]
-    b_sc2 = jnp.take_along_axis(sc2, best[:, None], 1)[:, 0]
-    ok1 = take(res1.ok.reshape(B * C)[:, None])[:, 0] & (b_pos1 != INVALID_LOC)
-    ok2 = take(res2.ok.reshape(B * C)[:, None])[:, 0] & (b_pos2 != INVALID_LOC)
-    light_ok = passed & ok1 & ok2
-    cig1 = take(cigar_ops(res1, R))
-    cig2 = take(cigar_ops(res2, R))
+    # -- 4. Light Alignment over candidates (fused kernel) ---------------
+    pair = _best_candidate_light(ref, reads1, reads2_fwd, cands, cfg)
+    b_pos1, b_pos2 = pair.pos1, pair.pos2
+    b_sc1, b_sc2 = pair.score1, pair.score2
+    light_ok = passed & pair.ok1 & pair.ok2
+    cig1, cig2 = pair.cigar1, pair.cigar2
 
     # -- DP fallback on the fixed-capacity residual buffer ---------------
     needs_dp = passed & ~light_ok
@@ -189,7 +174,6 @@ def map_pairs(
     order = jnp.argsort(~needs_dp, stable=True)
     dp_idx = order[:cap]
     dp_take = needs_dp[dp_idx]
-    W = R + 2 * cfg.dp_pad
     safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC, b_pos1[dp_idx], 0)
     safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC, b_pos2[dp_idx], 0)
     win1 = gather_ref_windows(ref, safe1, R, cfg.dp_pad)

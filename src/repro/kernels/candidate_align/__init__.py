@@ -1,0 +1,8 @@
+from repro.kernels.candidate_align.ops import candidate_pair_align
+from repro.kernels.candidate_align.ref import (
+    PairAlignResult,
+    candidate_pair_align_ref,
+)
+
+__all__ = ["candidate_pair_align", "candidate_pair_align_ref",
+           "PairAlignResult"]

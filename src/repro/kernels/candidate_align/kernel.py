@@ -1,0 +1,233 @@
+"""Pallas TPU kernel: fused candidate light-alignment (§4, Fig. 3 step 4).
+
+Fuses the step-4 hot path — per-candidate reference-window gather, the
+shifted-mask Light Alignment of both mates, the optional zero-shift Hamming
+prescreen (§Perf G2), and the argmax-over-candidates pair reduction — into
+one kernel.  The reference stays in HBM (`pl.ANY`); each grid step DMAs
+only the `2*C*BLK` candidate windows it is about to align into a VMEM
+scratch, so the `(B, C, R+2E)` window tensor and the `B*C` row reshape of
+the unfused path never exist in HBM.  This is the TPU analogue of the
+paper's bounded candidate FIFO between the Paired-Adjacency filter and the
+Light Alignment array: windows stream through on-chip memory and only the
+per-row winner is written back.
+
+Layout: windows land in a `(C, BLK, W)` scratch so each candidate's block
+is a contiguous `(BLK, W)` 2D tile; the alignment math (shared with the
+light_align kernel via `align_block`) runs per candidate in a static loop,
+and per-candidate scalars are concatenated to `(BLK, C)` for the reduction.
+
+With `packed_ref=True` the DMA fetches 2-bit packed uint32 words (4x less
+HBM traffic, mirroring the paper's 2-bit SRAM encoding) and the kernel
+unpacks + cuts the per-row `[off, off+W)` base window with a 16-way select
+on the intra-word offset.
+
+Argmax tie-breaking matches the jnp oracle exactly: the reduction key is
+``(score1 + score2) * C - rank`` where `rank` is the candidate's position
+in the prescreen ordering (its slot index when the prescreen is off), so
+equal pair scores resolve to the earliest candidate in oracle order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.encoding import BASES_PER_WORD
+from repro.core.scoring import Scoring
+from repro.kernels.light_align.kernel import align_block
+
+DEFAULT_BLOCK = 16     # batch rows per grid step (C candidates x 2 mates each)
+NEG_BIG = -(1 << 20)   # masked-candidate score sentinel
+MM_BIG = 1 << 20       # masked-candidate Hamming sentinel
+
+# The reduction key is (sc1 + sc2) * C - rank in int32; keep the whole key
+# range (and the below-everything floor for non-selected candidates)
+# representable.
+MAX_CANDIDATES = 512
+
+
+def _candidate_align_kernel(
+    # inputs
+    sdma1_ref, sdma2_ref,        # (BLK, C) int32 SMEM: DMA starts per window
+    off1_ref, off2_ref,          # (BLK, C) int32 VMEM: intra-word base offset
+    valid1_ref, valid2_ref,      # (BLK, C) int32 VMEM: candidate validity
+    reads1_ref, reads2_ref,      # (BLK, R) int32 VMEM
+    ref_any,                     # (L_pad,) int32 ANY/HBM: padded reference
+    # outputs, all (BLK, 1) int32
+    slot_ref, rank_ref, sc1_ref, sc2_ref, ok1_ref, ok2_ref,
+    et1_ref, el1_ref, ep1_ref, et2_ref, el2_ref, ep2_ref,
+    # scratch
+    win1, win2,                  # (C, BLK, win_elems) int32 VMEM
+    sems,                        # (2, C, BLK) DMA semaphores
+    *,
+    E: int, R: int, scoring: Scoring, threshold: int, mode: str,
+    prescreen_top: int, packed: bool, win_elems: int,
+):
+    BLK, C = sdma1_ref.shape
+    W = R + 2 * E
+
+    # ---- stream all 2*C*BLK candidate windows HBM -> VMEM ---------------
+    def _dma(mate, starts_ref, win, i):
+        r, c = i // C, i % C
+        s = starts_ref[r, c]
+        return pltpu.make_async_copy(
+            ref_any.at[pl.ds(s, win_elems)], win.at[c, r], sems.at[mate, c, r])
+
+    def _start(mate, starts_ref, win):
+        jax.lax.fori_loop(
+            0, BLK * C,
+            lambda i, _: (_dma(mate, starts_ref, win, i).start(), 0)[1], 0)
+
+    def _wait(mate, starts_ref, win):
+        jax.lax.fori_loop(
+            0, BLK * C,
+            lambda i, _: (_dma(mate, starts_ref, win, i).wait(), 0)[1], 0)
+
+    _start(0, sdma1_ref, win1)
+    _start(1, sdma2_ref, win2)
+    _wait(0, sdma1_ref, win1)
+    _wait(1, sdma2_ref, win2)
+
+    def window(win, off_ref, c):
+        """Candidate c's (BLK, W) base window."""
+        raw = win[c]                                   # (BLK, win_elems)
+        if not packed:
+            return raw
+        # Unpack 2-bit words (base i of a word occupies bits [2i, 2i+2)),
+        # then cut the per-row [off, off+W) slice with a 16-way select on
+        # the intra-word offset — off varies per row, so a static slice
+        # per possible offset replaces a dynamic lane gather.
+        codes = jnp.stack(
+            [(jax.lax.shift_right_logical(raw, 2 * o) & 3)
+             for o in range(BASES_PER_WORD)],
+            axis=-1).reshape(BLK, win_elems * BASES_PER_WORD)
+        off = off_ref[:, c:c + 1]                      # (BLK, 1)
+        out = codes[:, 0:W]
+        for o in range(1, BASES_PER_WORD):
+            out = jnp.where(off == o, codes[:, o:o + W], out)
+        return out
+
+    reads1 = reads1_ref[...]
+    reads2 = reads2_ref[...]
+    cols1 = [align_block(reads1, window(win1, off1_ref, c),
+                         E=E, scoring=scoring, mode=mode) for c in range(C)]
+    cols2 = [align_block(reads2, window(win2, off2_ref, c),
+                         E=E, scoring=scoring, mode=mode) for c in range(C)]
+
+    def stack(cols, j):                                # -> (BLK, C)
+        return jnp.concatenate([x[j][:, None] for x in cols], axis=1)
+
+    sc1_raw, et1, el1, ep1 = (stack(cols1, j) for j in range(4))
+    sc2_raw, et2, el2, ep2 = (stack(cols2, j) for j in range(4))
+    valid1 = valid1_ref[...] != 0
+    valid2 = valid2_ref[...] != 0
+    sc1 = jnp.where(valid1, sc1_raw, NEG_BIG)
+    sc2 = jnp.where(valid2, sc2_raw, NEG_BIG)
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (BLK, C), 1)
+    if 0 < prescreen_top < C:
+        # NOTE: unlike the jnp oracle (which aligns only the top-P
+        # windows), this backend aligns all C and uses the prescreen only
+        # to mask the reduction key — the bandwidth win is identical, but
+        # the compute saving is not yet realized in-kernel (gathering the
+        # selected windows needs a per-row sublane permute; ROADMAP item).
+        # rank = candidate's position in the mm0-ascending stable sort,
+        # replicating lax.top_k's lower-index-first tie-breaking.
+        mm0 = jnp.where(valid1 & valid2,
+                        stack(cols1, 5) + stack(cols2, 5), MM_BIG)
+        rank = jnp.zeros((BLK, C), jnp.int32)
+        for cp in range(C):
+            mcp = mm0[:, cp:cp + 1]
+            ahead = (mcp < mm0) | ((mcp == mm0) & (cp < col))
+            rank = rank + ahead.astype(jnp.int32)
+        selected = rank < prescreen_top
+    else:
+        rank = col
+        selected = jnp.ones((BLK, C), bool)
+
+    # Unique per-row reduction key: pair scores differ by >= 1, ranks by
+    # < C, so key ties among selected candidates are impossible and `hot`
+    # is exactly one-hot.  The floor for non-selected candidates sits
+    # strictly below the worst selected key (2*NEG_BIG*C - (C-1)); all
+    # values stay in int32 because C <= MAX_CANDIDATES.
+    key_floor = 2 * NEG_BIG * C - C
+    key = (sc1 + sc2) * C - rank
+    key = jnp.where(selected, key, key_floor)
+    hot = key == jnp.max(key, axis=-1, keepdims=True)
+
+    def pick(x):                                       # (BLK, C) -> (BLK, 1)
+        return jnp.sum(jnp.where(hot, x, 0), axis=-1, keepdims=True)
+
+    slot_ref[...] = pick(col)
+    rank_ref[...] = pick(rank)
+    sc1_ref[...] = pick(sc1)
+    sc2_ref[...] = pick(sc2)
+    ok1_ref[...] = pick(((sc1_raw >= threshold) & valid1).astype(jnp.int32))
+    ok2_ref[...] = pick(((sc2_raw >= threshold) & valid2).astype(jnp.int32))
+    et1_ref[...] = pick(et1)
+    el1_ref[...] = pick(el1)
+    ep1_ref[...] = pick(ep1)
+    et2_ref[...] = pick(et2)
+    el2_ref[...] = pick(el2)
+    ep2_ref[...] = pick(ep2)
+
+
+def candidate_align_pallas(
+    ref_arr: jnp.ndarray,        # (L_pad,) int32 padded ref (bases or words)
+    reads1: jnp.ndarray,         # (B, R) int32
+    reads2: jnp.ndarray,         # (B, R) int32
+    sdma1: jnp.ndarray,          # (B, C) int32 window DMA starts
+    sdma2: jnp.ndarray,
+    off1: jnp.ndarray,           # (B, C) int32 intra-word offsets (packed)
+    off2: jnp.ndarray,
+    valid1: jnp.ndarray,         # (B, C) int32 0/1
+    valid2: jnp.ndarray,
+    max_gap: int,
+    scoring: Scoring,
+    threshold: int,
+    mode: str,
+    prescreen_top: int,
+    packed: bool,
+    win_elems: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """B must be a multiple of `block` (ops.py pads).
+
+    Returns 12 (B,) int32 arrays: (slot, rank, score1, score2, ok1, ok2,
+    edit_type1, edit_len1, edit_pos1, edit_type2, edit_len2, edit_pos2).
+    """
+    B, R = reads1.shape
+    C = sdma1.shape[1]
+    assert B % block == 0, (B, block)
+    assert C <= MAX_CANDIDATES, (C, MAX_CANDIDATES)
+    grid = (B // block,)
+    row_spec = lambda cols: pl.BlockSpec((block, cols), lambda i: (i, 0))
+    smem_spec = pl.BlockSpec((block, C), lambda i: (i, 0),
+                             memory_space=pltpu.SMEM)
+    outs = pl.pallas_call(
+        functools.partial(
+            _candidate_align_kernel, E=max_gap, R=R, scoring=scoring,
+            threshold=threshold, mode=mode, prescreen_top=prescreen_top,
+            packed=packed, win_elems=win_elems,
+        ),
+        grid=grid,
+        in_specs=[
+            smem_spec, smem_spec,
+            row_spec(C), row_spec(C), row_spec(C), row_spec(C),
+            row_spec(R), row_spec(R),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[row_spec(1)] * 12,
+        out_shape=[jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 12,
+        scratch_shapes=[
+            pltpu.VMEM((C, block, win_elems), jnp.int32),
+            pltpu.VMEM((C, block, win_elems), jnp.int32),
+            pltpu.SemaphoreType.DMA((2, C, block)),
+        ],
+        interpret=interpret,
+    )(sdma1, sdma2, off1, off2, valid1, valid2, reads1, reads2, ref_arr)
+    return tuple(o[:, 0] for o in outs)

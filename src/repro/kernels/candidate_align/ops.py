@@ -1,0 +1,132 @@
+"""Jit'd public wrapper for the fused candidate light-alignment op.
+
+`candidate_pair_align` is the one-call step-4 hot path: candidate window
+gather + Light Alignment of both mates + prescreen + best-pair reduction,
+behind the same ``backend="auto"|"pallas"|"jnp"|"interpret"`` switch as
+`kernels/light_align/ops.py`.  The jnp backend is the bit-exact unfused
+oracle (`ref.py`); the pallas/interpret backends run the fused kernel,
+which never materializes the `(B, C, R+2E)` window tensor in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import BASES_PER_WORD, packed_gather_coords
+from repro.core.scoring import Scoring
+from repro.core.seedmap import INVALID_LOC
+from repro.kernels.candidate_align.kernel import (
+    DEFAULT_BLOCK,
+    candidate_align_pallas,
+)
+from repro.kernels.candidate_align.ref import (
+    PairAlignResult,
+    best_fields_to_cigars,
+    candidate_pair_align_ref,
+)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_gap", "scoring", "threshold", "mode",
+                     "prescreen_top", "packed_ref", "block", "backend"),
+)
+def candidate_pair_align(
+    ref: jnp.ndarray,        # (L,) uint8 bases, or (Lw,) uint32 packed words
+    reads1: jnp.ndarray,     # (B, R) mate 1, reference orientation
+    reads2: jnp.ndarray,     # (B, R) mate 2, reference orientation
+    pos1: jnp.ndarray,       # (B, C) candidate starts, INVALID_LOC padded
+    pos2: jnp.ndarray,       # (B, C)
+    max_gap: int,
+    scoring: Scoring = Scoring(),
+    threshold: int | None = None,
+    mode: str = "minsplit",
+    prescreen_top: int = 0,
+    packed_ref: bool = False,
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> PairAlignResult:
+    """Fused best-candidate Light Alignment for a batch of read pairs."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return candidate_pair_align_ref(
+            ref, reads1, reads2, pos1, pos2, max_gap, scoring, threshold,
+            mode, prescreen_top, packed_ref)
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    B, R = reads1.shape
+    C = pos1.shape[1]
+    E = max_gap
+    W = R + 2 * E
+    if threshold is None:
+        threshold = scoring.default_threshold(R)
+
+    valid1 = pos1 != INVALID_LOC
+    valid2 = pos2 != INVALID_LOC
+    if packed_ref:
+        # Same scalar clamp as gather_windows_packed; the DMA fetches whole
+        # words, the kernel unpacks and cuts the per-row base offset.
+        n_words, hi = packed_gather_coords(ref.shape[0], W)
+
+        def prep(pos, valid):
+            s = jnp.clip(jnp.where(valid, pos - E, 0), 0, hi)
+            return ((s // BASES_PER_WORD).astype(jnp.int32),
+                    (s % BASES_PER_WORD).astype(jnp.int32))
+
+        sdma1, off1 = prep(pos1, valid1)
+        sdma2, off2 = prep(pos2, valid2)
+        # Back-pad with the last word so word reads past Lw-1 see the same
+        # value the oracle's index clamp produces.
+        words = jax.lax.bitcast_convert_type(ref, jnp.int32)
+        ref_arr = jnp.concatenate(
+            [words, jnp.broadcast_to(words[-1:], (n_words,))])
+        win_elems = n_words
+    else:
+        # Edge-pad with the boundary bases so a contiguous window DMA at
+        # `pos` reproduces gather_ref_windows' per-element index clamp.
+        L = ref.shape[0]
+        r32 = ref.astype(jnp.int32)
+        ref_arr = jnp.concatenate([
+            jnp.broadcast_to(r32[:1], (E,)), r32,
+            jnp.broadcast_to(r32[-1:], (R + E,)),
+        ])
+
+        def prep(pos, valid):
+            s = jnp.clip(jnp.where(valid, pos, 0), 0, L - 1)
+            return s.astype(jnp.int32), jnp.zeros_like(s, jnp.int32)
+
+        sdma1, off1 = prep(pos1, valid1)
+        sdma2, off2 = prep(pos2, valid2)
+        win_elems = W
+
+    pad = (-B) % block
+    def padded(x, rows=pad):
+        if not pad:
+            return x
+        return jnp.concatenate(
+            [x, jnp.zeros((rows,) + x.shape[1:], x.dtype)], 0)
+
+    outs = candidate_align_pallas(
+        ref_arr,
+        padded(reads1.astype(jnp.int32)), padded(reads2.astype(jnp.int32)),
+        padded(sdma1), padded(sdma2), padded(off1), padded(off2),
+        padded(valid1.astype(jnp.int32)), padded(valid2.astype(jnp.int32)),
+        E, scoring, threshold, mode, prescreen_top, packed_ref, win_elems,
+        block, interpret=(backend == "interpret"),
+    )
+    sl = slice(0, B)
+    (slot, rank, sc1, sc2, ok1, ok2,
+     et1, el1, ep1, et2, el2, ep2) = (o[sl] for o in outs)
+    b_pos1 = jnp.take_along_axis(pos1, slot[:, None], 1)[:, 0]
+    b_pos2 = jnp.take_along_axis(pos2, slot[:, None], 1)[:, 0]
+    return PairAlignResult(
+        best=rank, slot=slot, pos1=b_pos1, pos2=b_pos2,
+        score1=sc1, score2=sc2,
+        ok1=ok1.astype(bool), ok2=ok2.astype(bool),
+        cigar1=best_fields_to_cigars(et1, el1, ep1, R),
+        cigar2=best_fields_to_cigars(et2, el2, ep2, R),
+    )

@@ -22,12 +22,15 @@ DEFAULT_BLOCK = 128
 BIG = 1 << 20
 
 
-def _light_align_kernel(
-    read_ref, win_ref, score_ref, type_ref, len_ref, pos_ref, mm_ref,
-    *, E: int, scoring: Scoring, threshold: int, mode: str,
-):
-    read = read_ref[...]   # (BLK, R) int32
-    win = win_ref[...]     # (BLK, R + 2E) int32
+def align_block(read, win, *, E: int, scoring: Scoring, mode: str):
+    """Pure shifted-mask Light Alignment over one block of candidates.
+
+    read (BLK, R) int32, win (BLK, R+2E) int32 -> six (BLK,) int32 arrays:
+    (score, edit_type, edit_len, edit_pos, n_mismatch, mm_zero_shift).
+    The last is the 0-shift Hamming distance, exposed for the candidate
+    prescreen (candidate_align kernel); the rest match LightAlignResult.
+    Shared by the light_align and candidate_align Pallas kernels.
+    """
     BLK, R = read.shape
     m2 = scoring.match + scoring.mismatch
 
@@ -90,11 +93,21 @@ def _light_align_kernel(
         consider(sc_i, jnp.full((BLK,), 1, jnp.int32),
                  jnp.full((BLK,), k, jnp.int32), p_i, mm_i)
 
-    score_ref[...] = best_score[:, None]
-    type_ref[...] = best_type[:, None]
-    len_ref[...] = best_len[:, None]
-    pos_ref[...] = best_pos[:, None]
-    mm_ref[...] = best_mm[:, None]
+    return best_score, best_type, best_len, best_pos, best_mm, mm_none
+
+
+def _light_align_kernel(
+    read_ref, win_ref, score_ref, type_ref, len_ref, pos_ref, mm_ref,
+    *, E: int, scoring: Scoring, threshold: int, mode: str,
+):
+    del threshold  # `ok` is derived outside the kernel
+    score, etype, elen, epos, mm, _ = align_block(
+        read_ref[...], win_ref[...], E=E, scoring=scoring, mode=mode)
+    score_ref[...] = score[:, None]
+    type_ref[...] = etype[:, None]
+    len_ref[...] = elen[:, None]
+    pos_ref[...] = epos[:, None]
+    mm_ref[...] = mm[:, None]
 
 
 def light_align_pallas(

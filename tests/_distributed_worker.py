@@ -32,12 +32,12 @@ from repro.core.pipeline import PipelineConfig  # noqa: E402
 from repro.core.query import query_read_batch  # noqa: E402
 from repro.core.seeding import seed_read_batch  # noqa: E402
 from repro.core.seedmap import INVALID_LOC  # noqa: E402
+from repro.launch.mesh import make_auto_mesh  # noqa: E402
 
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     ref = random_reference(120_000, rng)
     cfg = PipelineConfig()

@@ -12,7 +12,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; "
+                    "pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     PipelineConfig, Scoring, SeedMapConfig, build_seedmap, light_align,

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; "
+                    "pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.checkpoint import Checkpointer
 from repro.optim.compress import CompressConfig, compress, init_state
@@ -75,7 +78,8 @@ def test_checkpoint_async_overlaps_and_commits(tmp_path):
 def test_checkpoint_reshard_on_restore(tmp_path):
     """Save replicated, restore sharded across a 1-device mesh slice."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("data",))
     ck = Checkpointer(str(tmp_path))
     t = {"w": np.arange(32, dtype=np.float32).reshape(4, 8)}
     ck.save(1, t)
