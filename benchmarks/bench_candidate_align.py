@@ -5,10 +5,15 @@ full `(B, C, R+2E)` window tensor in HBM, light-align the `B*C` reshape
 per mate, then argmax the pair score.  The fused path is one
 `candidate_pair_align` call (backend="auto": the Pallas kernel on TPU,
 the jnp oracle elsewhere — on CPU the two paths compute identical programs,
-so the ratio approaches 1; the HBM-traffic win shows up on TPU).
+so the ratio approaches 1; the HBM-traffic win shows up on TPU).  The
+kernel backends run the double-buffered ping-pong DMA protocol and, with
+`prescreen_top=P`, skip the full alignment for all but P candidates
+(P/C of the alignment compute); the `_psP` rows report that variant.
 
 Derived columns: window tensor bytes the unfused path materializes per
-mate, and the fused/unfused speedup.
+mate, the fused/unfused speedup, and (in the `cand_align_bitexact` row)
+interpret-kernel-vs-jnp-oracle equality for both reference flavors —
+consumed by CI as a workflow artifact.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn, world
+from repro.core.encoding import pack_2bit
 from repro.core.light_align import gather_ref_windows, light_align
 from repro.core.pipeline import PipelineConfig
 from repro.core.seedmap import INVALID_LOC
@@ -60,6 +66,37 @@ def _unfused(ref, reads1, reads2, pos1, pos2, cfg):
             jnp.take_along_axis(sc1 + sc2, bi[:, None], 1)[:, 0])
 
 
+def _verify_bitexact(ref_j, cfg) -> dict:
+    """Interpret-mode kernel (double-buffered DMA + prescreen skip) vs the
+    jnp oracle on a small world, packed and unpacked, prescreen on/off."""
+    rng = np.random.default_rng(5)
+    # Small world (interpret-mode compiles dominate) but block=4 so the
+    # grid has >= 2 steps and the cross-step prefetch/bank-alternation
+    # path actually executes under the gate.
+    B, C, BLK = 8, 4, 4
+    reads1 = jnp.asarray(rng.integers(0, 4, (B, R), dtype=np.uint8))
+    reads2 = jnp.asarray(rng.integers(0, 4, (B, R), dtype=np.uint8))
+    pos1, pos2 = _candidates(int(ref_j.shape[0]), B, C, rng)
+    words = jnp.asarray(pack_2bit(ref_j))
+    out = {}
+    for packed in (False, True):
+        ok = True
+        for ps in (0, C // 2):
+            kw = dict(scoring=cfg.scoring, threshold=cfg.threshold(),
+                      mode=cfg.light_mode, prescreen_top=ps,
+                      packed_ref=packed, block=BLK)
+            got = candidate_pair_align(words if packed else ref_j, reads1,
+                                       reads2, pos1, pos2, cfg.max_gap,
+                                       backend="interpret", **kw)
+            want = candidate_pair_align(words if packed else ref_j, reads1,
+                                        reads2, pos1, pos2, cfg.max_gap,
+                                        backend="jnp", **kw)
+            ok &= all(bool(jnp.array_equal(getattr(got, f), getattr(want, f)))
+                      for f in got._fields)
+        out["packed" if packed else "unpacked"] = ok
+    return out
+
+
 def run() -> list[dict]:
     ref, _, ref_j = world(300_000)
     cfg = PipelineConfig()
@@ -77,6 +114,12 @@ def run() -> list[dict]:
                 ref_j, reads1, reads2, pos1, pos2, cfg.max_gap,
                 scoring=cfg.scoring, threshold=cfg.threshold(),
                 mode=cfg.light_mode, backend="auto"))
+        ps = C // 2
+        us_fused_ps = time_fn(
+            lambda: candidate_pair_align(
+                ref_j, reads1, reads2, pos1, pos2, cfg.max_gap,
+                scoring=cfg.scoring, threshold=cfg.threshold(),
+                mode=cfg.light_mode, prescreen_top=ps, backend="auto"))
         hbm_mb = B * C * (R + 2 * E) / 1e6  # uint8 window tensor per mate
         rows.append(row(
             f"cand_align_unfused_B{B}_C{C}", us_unfused,
@@ -84,6 +127,21 @@ def run() -> list[dict]:
         rows.append(row(
             f"cand_align_fused_B{B}_C{C}", us_fused,
             speedup=round(us_unfused / max(us_fused, 1e-9), 3)))
+        rows.append(row(
+            f"cand_align_fused_ps{ps}_B{B}_C{C}", us_fused_ps,
+            speedup=round(us_unfused / max(us_fused_ps, 1e-9), 3),
+            align_frac=round(ps / C, 3)))
+
+    import time
+    t0 = time.perf_counter()
+    exact = _verify_bitexact(ref_j, cfg)
+    rows.append(row("cand_align_bitexact",
+                    (time.perf_counter() - t0) * 1e6,
+                    bitexact_unpacked=exact["unpacked"],
+                    bitexact_packed=exact["packed"]))
+    # Hard gate, not an advisory column: a kernel/oracle divergence must
+    # fail the benchmark job (run.py exits nonzero on module exceptions).
+    assert exact["unpacked"] and exact["packed"], exact
     return rows
 
 

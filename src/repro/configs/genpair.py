@@ -27,7 +27,12 @@ SCALE = GenPairScale(
     read_len=150,
 )
 
-PIPELINE = PipelineConfig()
+# Dry-run pipeline (the default `lower_genpair` config): explicitly
+# packed (2-bit) reference — at GRCh38 scale the packed replica is
+# 775 MB/device vs 3.1 GB unpacked, and the fused candidate_align kernel
+# DMAs 4x fewer window bytes.  `packed_ref` is the tri-state
+# PipelineConfig knob (None = per-entry-point default).
+PIPELINE = PipelineConfig(packed_ref=True)
 SEEDMAP = SeedMapConfig(table_bits=SCALE.table_bits)
 
 # CPU-testable miniature (same topology, ~1e5 reference)

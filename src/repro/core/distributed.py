@@ -130,7 +130,15 @@ def make_distributed_map_pairs(mesh: Mesh, cfg: PipelineConfig,
     """Data-parallel GenPair pipeline: batch over `batch_axes`, reference and
     SeedMap replicated (the index-sharded query path is exercised separately
     by make_sharded_query; fusing both is the hillclimb subject in
-    EXPERIMENTS.md §Perf)."""
+    EXPERIMENTS.md §Perf).
+
+    `cfg.packed_ref=True` flows through map_pairs: both the candidate-align
+    kernel and the DP fallback gather from the 2-bit packed replica (4x
+    smaller window DMAs on every device).  Pass the pre-packed uint32
+    words (`pack_2bit(ref)`) as the `ref` argument — map_pairs accepts
+    either flavor, but handing it uint8 makes every jitted step re-read
+    and re-pack the whole reference, which at genome scale costs more than
+    the window saving, and replicates the 4x-larger uint8 array."""
 
     batch_spec = NamedSharding(mesh, P(batch_axes))
     repl = NamedSharding(mesh, P())

@@ -24,7 +24,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.distributed import ShardedSeedMap, _local_query
 from repro.core.dp_fallback import gotoh_semiglobal
-from repro.core.encoding import gather_windows_packed
+from repro.core.encoding import (
+    BASES_PER_WORD,
+    gather_windows_packed,
+    unpack_2bit,
+)
+from repro.core.light_align import gather_ref_windows
 from repro.core.pair_filter import paired_adjacency_filter
 from repro.kernels.candidate_align.ops import candidate_pair_align
 from repro.core.pipeline import (
@@ -115,11 +120,23 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
         # Fused step 4: packed-window gather + G2 prescreen + Light
         # Alignment + best-pair reduction in one op (the kernel backends
         # stream 2-bit words straight from HBM, no (B, C, R+2E) tensor).
+        # The serve step defaults to the packed flavor (775 MB/device at
+        # genome scale); cfg.packed_ref=False forces an unpacked run for
+        # flavor-parity debugging against map_pairs.  Caveat: the words
+        # are the only length info here, so the debug unpack keeps the
+        # final word's stored pad bases ('A') — windows within
+        # BASES_PER_WORD-1 bases of the padded end clamp against those
+        # pads (as the packed flavor does), not against a replicated true
+        # last base as map_pairs' uint8 path would.  It also materializes
+        # the full unpacked reference per step: debug scales only.
+        packed = cfg.packed(default=True)
+        la_ref = ref_words if packed else unpack_2bit(
+            ref_words, ref_words.shape[0] * BASES_PER_WORD)
         pair = candidate_pair_align(
-            ref_words, reads1, reads2_fwd, cands.pos1, cands.pos2,
+            la_ref, reads1, reads2_fwd, cands.pos1, cands.pos2,
             cfg.max_gap, scoring=cfg.scoring, threshold=cfg.threshold(),
             mode=cfg.light_mode, prescreen_top=cfg.prescreen_top,
-            packed_ref=True, backend=cfg.light_backend)
+            packed_ref=packed, backend=cfg.light_backend)
         b_pos1, b_pos2 = pair.pos1, pair.pos2
         b_sc1, b_sc2 = pair.score1, pair.score2
         light_ok = passed & pair.ok1 & pair.ok2
@@ -131,12 +148,22 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
         order = jnp.argsort(~needs_dp, stable=True)
         dp_idx = order[:cap]
         dp_take = needs_dp[dp_idx]
-        safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
-                          b_pos1[dp_idx] - cfg.dp_pad, 0)
-        safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
-                          b_pos2[dp_idx] - cfg.dp_pad, 0)
-        win1 = gather_windows_packed(ref_words, safe1, R + 2 * cfg.dp_pad)
-        win2 = gather_windows_packed(ref_words, safe2, R + 2 * cfg.dp_pad)
+        if packed:
+            safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
+                              b_pos1[dp_idx] - cfg.dp_pad, 0)
+            safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
+                              b_pos2[dp_idx] - cfg.dp_pad, 0)
+            win1 = gather_windows_packed(ref_words, safe1,
+                                         R + 2 * cfg.dp_pad)
+            win2 = gather_windows_packed(ref_words, safe2,
+                                         R + 2 * cfg.dp_pad)
+        else:
+            safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
+                              b_pos1[dp_idx], 0)
+            safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
+                              b_pos2[dp_idx], 0)
+            win1 = gather_ref_windows(la_ref, safe1, R, cfg.dp_pad)
+            win2 = gather_ref_windows(la_ref, safe2, R, cfg.dp_pad)
         dp1 = gotoh_semiglobal(reads1[dp_idx], win1, cfg.scoring)
         dp2 = gotoh_semiglobal(reads2_fwd[dp_idx], win2, cfg.scoring)
         neg = -(1 << 20)

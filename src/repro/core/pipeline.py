@@ -29,6 +29,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.encoding import gather_windows_packed, pack_2bit
 from repro.core.light_align import gather_ref_windows
 from repro.core.dp_fallback import gotoh_semiglobal
 from repro.core.pair_filter import CandidateSet, paired_adjacency_filter
@@ -63,11 +64,24 @@ class PipelineConfig:
     # Backend for the fused candidate light-alignment op ("auto" resolves
     # to the Pallas kernel on TPU, the bit-exact jnp oracle elsewhere).
     light_backend: str = "auto"
+    # Run the whole pipeline (candidate windows + DP fallback windows)
+    # against the 2-bit packed reference: 4x less HBM window traffic, the
+    # paper's SRAM encoding (§7.4).  Tri-state: None keeps each entry
+    # point's historical default (map_pairs: unpacked; the genome-scale
+    # serve step: packed); True/False force the flavor everywhere.  The
+    # two gather flavors clamp out-of-range windows differently, so flips
+    # may change scores for candidates in the outer E bases of the
+    # reference.
+    packed_ref: bool | None = None
 
     def threshold(self) -> int:
         if self.accept_threshold is not None:
             return self.accept_threshold
         return self.scoring.default_threshold(self.read_len)
+
+    def packed(self, default: bool) -> bool:
+        """Resolve the tri-state packed_ref against an entry point default."""
+        return default if self.packed_ref is None else self.packed_ref
 
 
 jax.tree_util.register_static(PipelineConfig)
@@ -102,11 +116,12 @@ def stage_stats(res: MapResult) -> dict:
 
 
 def _best_candidate_light(
-    ref: jnp.ndarray,
+    ref: jnp.ndarray,          # (L,) uint8 bases, or (Lw,) uint32 words
     reads1: jnp.ndarray,       # (B, R) mate 1, reference orientation
     reads2: jnp.ndarray,       # (B, R) mate 2, reference orientation
     cands: CandidateSet,
     cfg: PipelineConfig,
+    packed: bool,
 ):
     """Fused step 4: gather + Light Alignment + best-pair reduction.
 
@@ -123,7 +138,7 @@ def _best_candidate_light(
     return candidate_pair_align(
         ref, reads1, reads2, cands.pos1, cands.pos2, cfg.max_gap,
         scoring=cfg.scoring, threshold=cfg.threshold(), mode=cfg.light_mode,
-        prescreen_top=cfg.prescreen_top, packed_ref=False,
+        prescreen_top=cfg.prescreen_top, packed_ref=packed,
         backend=cfg.light_backend,
     )
 
@@ -141,7 +156,12 @@ def map_pairs(
     reads2: jnp.ndarray,
     cfg: PipelineConfig = PipelineConfig(),
 ) -> MapResult:
-    """Map a batch of FR read pairs. reads2 is as-sequenced (reverse strand)."""
+    """Map a batch of FR read pairs. reads2 is as-sequenced (reverse strand).
+
+    ``ref`` is the (L,) uint8 base array; with ``cfg.packed_ref=True`` it
+    may instead be the (Lw,) uint32 2-bit packing (`pack_2bit`), which
+    skips the in-step repack.
+    """
     B, R = reads1.shape
     assert R == cfg.read_len, (R, cfg.read_len)
     reads2_fwd = (3 - reads2)[:, ::-1]  # reference orientation (revcomp)
@@ -162,7 +182,18 @@ def map_pairs(
     passed = cands.n > 0
 
     # -- 4. Light Alignment over candidates (fused kernel) ---------------
-    pair = _best_candidate_light(ref, reads1, reads2_fwd, cands, cfg)
+    # With packed_ref both the candidate windows and the DP fallback
+    # windows gather from the 2-bit packed reference (4x less HBM window
+    # traffic, the serve step's flavor).  Callers that already hold the
+    # packed words (uint32) should pass them directly — packing a uint8
+    # ref in here costs a full reference read per jitted call, which at
+    # genome scale dwarfs the window-DMA saving.
+    packed = cfg.packed(default=False)
+    ref_words = None
+    if packed:
+        ref_words = ref if ref.dtype == jnp.uint32 else pack_2bit(ref)
+    pair = _best_candidate_light(ref_words if packed else ref,
+                                 reads1, reads2_fwd, cands, cfg, packed)
     b_pos1, b_pos2 = pair.pos1, pair.pos2
     b_sc1, b_sc2 = pair.score1, pair.score2
     light_ok = passed & pair.ok1 & pair.ok2
@@ -174,10 +205,18 @@ def map_pairs(
     order = jnp.argsort(~needs_dp, stable=True)
     dp_idx = order[:cap]
     dp_take = needs_dp[dp_idx]
-    safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC, b_pos1[dp_idx], 0)
-    safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC, b_pos2[dp_idx], 0)
-    win1 = gather_ref_windows(ref, safe1, R, cfg.dp_pad)
-    win2 = gather_ref_windows(ref, safe2, R, cfg.dp_pad)
+    if packed:
+        safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
+                          b_pos1[dp_idx] - cfg.dp_pad, 0)
+        safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
+                          b_pos2[dp_idx] - cfg.dp_pad, 0)
+        win1 = gather_windows_packed(ref_words, safe1, R + 2 * cfg.dp_pad)
+        win2 = gather_windows_packed(ref_words, safe2, R + 2 * cfg.dp_pad)
+    else:
+        safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC, b_pos1[dp_idx], 0)
+        safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC, b_pos2[dp_idx], 0)
+        win1 = gather_ref_windows(ref, safe1, R, cfg.dp_pad)
+        win2 = gather_ref_windows(ref, safe2, R, cfg.dp_pad)
     dp1 = gotoh_semiglobal(reads1[dp_idx], win1, cfg.scoring)
     dp2 = gotoh_semiglobal(reads2_fwd[dp_idx], win2, cfg.scoring)
     dp_sc1 = jnp.full((B,), -(1 << 20), jnp.int32).at[dp_idx].set(

@@ -10,6 +10,7 @@ which never materializes the `(B, C, R+2E)` window tensor in HBM.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,7 @@ from repro.core.scoring import Scoring
 from repro.core.seedmap import INVALID_LOC
 from repro.kernels.candidate_align.kernel import (
     DEFAULT_BLOCK,
+    LAUNCH_ROWS,
     candidate_align_pallas,
 )
 from repro.kernels.candidate_align.ref import (
@@ -48,9 +50,17 @@ def candidate_pair_align(
     block: int = DEFAULT_BLOCK,
     backend: str = "auto",
 ) -> PairAlignResult:
-    """Fused best-candidate Light Alignment for a batch of read pairs."""
+    """Fused best-candidate Light Alignment for a batch of read pairs.
+
+    ``backend="auto"`` resolves to the Pallas kernel on TPU and the jnp
+    oracle elsewhere; the ``REPRO_LIGHT_BACKEND`` env var overrides the
+    auto choice (CI uses it to drive the whole pipeline through the
+    interpret-mode kernel on CPU).  The override is read at trace time, so
+    set it before the first call in a process.
+    """
     if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        backend = os.environ.get("REPRO_LIGHT_BACKEND") or (
+            "pallas" if jax.default_backend() == "tpu" else "jnp")
     if backend == "jnp":
         return candidate_pair_align_ref(
             ref, reads1, reads2, pos1, pos2, max_gap, scoring, threshold,
@@ -103,21 +113,35 @@ def candidate_pair_align(
         sdma2, off2 = prep(pos2, valid2)
         win_elems = W
 
-    pad = (-B) % block
-    def padded(x, rows=pad):
-        if not pad:
+    # Chunk the launch so the scalar-prefetch DMA tables (SMEM, 2*rows*C*4
+    # bytes per launch) stay bounded for arbitrarily large batches; every
+    # chunk shares one trace/compile (identical shapes).
+    chunk = max(block, LAUNCH_ROWS - LAUNCH_ROWS % block)
+    total = B + ((-B) % block)
+    if total > chunk:
+        total = B + ((-B) % chunk)
+    rows = min(total, chunk)
+
+    def padded(x):
+        if total == B:
             return x
         return jnp.concatenate(
-            [x, jnp.zeros((rows,) + x.shape[1:], x.dtype)], 0)
+            [x, jnp.zeros((total - B,) + x.shape[1:], x.dtype)], 0)
 
-    outs = candidate_align_pallas(
-        ref_arr,
-        padded(reads1.astype(jnp.int32)), padded(reads2.astype(jnp.int32)),
-        padded(sdma1), padded(sdma2), padded(off1), padded(off2),
-        padded(valid1.astype(jnp.int32)), padded(valid2.astype(jnp.int32)),
-        E, scoring, threshold, mode, prescreen_top, packed_ref, win_elems,
-        block, interpret=(backend == "interpret"),
-    )
+    ins = tuple(padded(x) for x in (
+        reads1.astype(jnp.int32), reads2.astype(jnp.int32),
+        sdma1, sdma2, off1, off2,
+        valid1.astype(jnp.int32), valid2.astype(jnp.int32)))
+    parts = [
+        candidate_align_pallas(
+            ref_arr, *(x[s:s + rows] for x in ins),
+            E, scoring, threshold, mode, prescreen_top, packed_ref,
+            win_elems, block, interpret=(backend == "interpret"),
+        )
+        for s in range(0, total, rows)
+    ]
+    outs = [jnp.concatenate(cols) if len(parts) > 1 else cols[0]
+            for cols in zip(*parts)]
     sl = slice(0, B)
     (slot, rank, sc1, sc2, ok1, ok2,
      et1, el1, ep1, et2, el2, ep2) = (o[sl] for o in outs)

@@ -10,6 +10,7 @@ Working set per block: O(BLK * (2E+1) * R * 4 B) — BLK=128, E=8, R=150
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -22,6 +23,37 @@ DEFAULT_BLOCK = 128
 BIG = 1 << 20
 
 
+class AlignBlockCounter:
+    """Trace-time `align_block` invocation count (see the context manager)."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+
+_counter: AlignBlockCounter | None = None
+
+
+@contextlib.contextmanager
+def count_align_block_calls():
+    """Count `align_block` invocations traced while the context is active.
+
+    `align_block` is unrolled statically inside the kernels (one call per
+    candidate per mate), so the trace-time call count IS the per-row
+    alignment work: with the candidate prescreen enabled the fused
+    candidate_align kernel must trace `prescreen_top` calls per mate, not
+    `C`.  Interpret-mode tests use this to prove the G2 compute saving is
+    real skipped work, not just a masked reduction.  Callers must ensure a
+    fresh trace happens inside the context (e.g. `jit.clear_cache()`);
+    cached executables trace nothing and count zero.
+    """
+    global _counter
+    prev, _counter = _counter, AlignBlockCounter()
+    try:
+        yield _counter
+    finally:
+        _counter = prev
+
+
 def align_block(read, win, *, E: int, scoring: Scoring, mode: str):
     """Pure shifted-mask Light Alignment over one block of candidates.
 
@@ -31,6 +63,8 @@ def align_block(read, win, *, E: int, scoring: Scoring, mode: str):
     prescreen (candidate_align kernel); the rest match LightAlignResult.
     Shared by the light_align and candidate_align Pallas kernels.
     """
+    if _counter is not None:
+        _counter.count += 1
     BLK, R = read.shape
     m2 = scoring.match + scoring.mismatch
 

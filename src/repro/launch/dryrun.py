@@ -329,8 +329,11 @@ def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
 
 def lower_genpair(mesh, rules: ShardingRules,
                   pipe: PipelineConfig | None = None):
+    # The serve_256k cell's pipeline config (packed 2-bit reference etc.)
+    # lives in configs/genpair.py next to the scale constants.
+    from repro.configs.genpair import PIPELINE
     scale = GenPairScale()
-    pipe = pipe or PipelineConfig()
+    pipe = pipe or PIPELINE
     sm_cfg = SeedMapConfig(table_bits=scale.table_bits)
     n_model = mesh.shape[rules.tensor_axis]
     specs = genpair_input_specs(scale, n_model)

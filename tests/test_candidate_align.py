@@ -22,6 +22,7 @@ from repro.core.query import query_read_batch
 from repro.core.seeding import seed_read_batch
 from repro.core.seedmap import INVALID_LOC
 from repro.kernels.candidate_align import candidate_pair_align
+from repro.kernels.light_align.kernel import count_align_block_calls
 
 L, R, E = 5000, 100, 6
 
@@ -162,6 +163,49 @@ def test_wide_candidate_set_all_invalid_row():
     assert int(got.slot[0]) < c_   # in-range slot, not a multi-hot sum
 
 
+@pytest.mark.parametrize("packed", [False, True])
+def test_prescreen_sweep_bit_exact(packed):
+    """Kernel == oracle across prescreen_top in {0, 1, C//2, C}, both
+    gather flavors (acceptance sweep for the in-kernel prescreen skip).
+    C=4 / two grid steps keeps interpret-mode compile time tolerable
+    while still exercising the ping-pong banks and the skip gather."""
+    C = 4
+    ref, r1, r2, p1, p2 = _world(8, C, seed=17)
+    ref_in = jnp.asarray(pack_2bit(jnp.asarray(ref))) if packed \
+        else jnp.asarray(ref)
+    for ps in (0, 1, C // 2, C):
+        got = candidate_pair_align(ref_in, r1, r2, p1, p2, E,
+                                   backend="interpret", block=4,
+                                   prescreen_top=ps, packed_ref=packed)
+        want = candidate_pair_align(ref_in, r1, r2, p1, p2, E,
+                                    backend="jnp",
+                                    prescreen_top=ps, packed_ref=packed)
+        _assert_same(got, want, f"packed={packed} prescreen={ps}")
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_prescreen_skip_traces_at_most_top_alignments(packed):
+    """The G2 compute saving is real skipped work on the Pallas backend:
+    with the prescreen on, the kernel traces exactly `prescreen_top` full
+    `align_block` alignments per mate (not C) — i.e. <= prescreen_top
+    alignments per row.  `align_block` is statically unrolled per
+    candidate, so the trace-time call count IS the per-row work."""
+    C = 4
+    ref, r1, r2, p1, p2 = _world(8, C, seed=13)
+    ref_in = jnp.asarray(pack_2bit(jnp.asarray(ref))) if packed \
+        else jnp.asarray(ref)
+    for ps, expect_per_mate in [(0, C), (1, 1), (C // 2, C // 2), (C, C)]:
+        candidate_pair_align.clear_cache()   # force a fresh trace
+        with count_align_block_calls() as ctr:
+            candidate_pair_align(ref_in, r1, r2, p1, p2, E,
+                                 backend="interpret", block=4,
+                                 prescreen_top=ps, packed_ref=packed)
+        assert ctr.count == 2 * expect_per_mate, \
+            f"packed={packed} prescreen={ps}: traced {ctr.count} alignments"
+        if 0 < ps < C:
+            assert ctr.count // 2 <= ps
+
+
 def _seed_best_candidate_light(ref, reads, starts, cfg):
     """The seed repo's unfused `_best_candidate_light`, kept verbatim as the
     regression oracle for the fused rewrite."""
@@ -234,6 +278,34 @@ def test_map_pairs_interpret_backend_matches_jnp():
         np.testing.assert_array_equal(
             np.asarray(getattr(res_jnp, f)), np.asarray(getattr(res_int, f)),
             err_msg=f"field {f}")
+
+
+def test_map_pairs_packed_ref():
+    """cfg.packed_ref=True runs the whole pipeline against the 2-bit
+    packed reference: jnp and interpret backends agree bit-for-bit, and
+    the mapping matches the unpacked flavor away from reference edges."""
+    rng = np.random.default_rng(6)
+    ref = random_reference(40_000, rng)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=14))
+    sim = simulate_pairs(ref, 24, ReadSimConfig(sub_rate=2e-3), seed=4)
+    reads1, reads2 = jnp.asarray(sim.reads1), jnp.asarray(sim.reads2)
+    ref_j = jnp.asarray(ref)
+    res_pj = map_pairs(sm, ref_j, reads1, reads2,
+                       PipelineConfig(packed_ref=True, light_backend="jnp"))
+    res_pi = map_pairs(sm, ref_j, reads1, reads2,
+                       PipelineConfig(packed_ref=True,
+                                      light_backend="interpret"))
+    for f in ("pos1", "pos2", "score1", "score2", "method",
+              "cigar1", "cigar2"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_pj, f)), np.asarray(getattr(res_pi, f)),
+            err_msg=f"packed field {f}")
+    res_u = map_pairs(sm, ref_j, reads1, reads2,
+                      PipelineConfig(light_backend="jnp"))
+    same = (np.asarray(res_pj.pos1) == np.asarray(res_u.pos1)).mean()
+    assert same >= 0.95, f"packed flavor changed {1 - same:.1%} of positions"
+    light = np.asarray(res_pj.method) == M_LIGHT
+    assert light.mean() > 0.5
 
 
 def test_prescreen_keeps_mapping_in_map_pairs():

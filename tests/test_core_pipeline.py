@@ -10,7 +10,9 @@ from repro.core import (
 )
 from repro.core.baseline import exact_match_rate, map_single_end
 from repro.core.long_read import LongReadConfig, map_long_reads
-from repro.core.pipeline import M_DP, M_LIGHT
+from repro.core.pipeline import (
+    M_DP, M_DP_OVERFLOW, M_LIGHT, M_RESIDUAL_FULL, M_UNMAPPED,
+)
 
 
 @pytest.fixture(scope="module")
@@ -58,6 +60,39 @@ def test_stage_stats_consistency(world):
     # unmapped-without-flag is impossible: every pair is accounted for
     assert total <= 1.0 + 1e-6
     assert st["light_mapped"] > 0.3
+
+
+def test_method_codes_partition_batch(world):
+    """Every row carries exactly one M_UNMAPPED..M_DP_OVERFLOW code,
+    consistent with the had_hits/passed_adjacency/light_ok flags, and
+    stage_stats fractions are non-negative, bounded by 1, and partition
+    the batch.  Two regimes: mostly-light and DP-starved (overflow)."""
+    ref, sm = world
+    for sub, frac, seed in ((0.01, 0.25, 12), (0.05, 0.02, 13)):
+        sim = simulate_pairs(ref, 96, ReadSimConfig(sub_rate=sub), seed=seed)
+        res = map_pairs(sm, jnp.asarray(ref), jnp.asarray(sim.reads1),
+                        jnp.asarray(sim.reads2),
+                        PipelineConfig(residual_capacity_frac=frac))
+        m = np.asarray(res.method)
+        had = np.asarray(res.had_hits)
+        passed = np.asarray(res.passed_adjacency)
+        lok = np.asarray(res.light_ok)
+        assert ((m >= M_UNMAPPED) & (m <= M_DP_OVERFLOW)).all()
+        # flag implications: candidates need hits, acceptance needs cands
+        assert (passed <= had).all()
+        assert (lok <= passed).all()
+        # the method code is a function of the flags (a partition)
+        np.testing.assert_array_equal(m == M_LIGHT, lok)
+        np.testing.assert_array_equal(m == M_RESIDUAL_FULL, ~passed)
+        np.testing.assert_array_equal(
+            (m == M_DP) | (m == M_DP_OVERFLOW), passed & ~lok)
+        st = {k: float(v) for k, v in stage_stats(res).items()}
+        for k, v in st.items():
+            assert 0.0 <= v <= 1.0 + 1e-9, (k, v)
+        assert abs(st["light_mapped"] + st["dp_mapped"] + st["dp_overflow"]
+                   + st["residual_full_dp"] - 1.0) < 1e-6
+        assert abs(st["no_seed_hit"] + st["adjacency_fail"]
+                   - st["residual_full_dp"]) < 1e-6
 
 
 def test_residual_capacity_overflow():
