@@ -1,0 +1,124 @@
+"""Fused vs staged pipeline front end across (B, K) sweeps.
+
+The staged baseline is the seed repo's steps 1-3: `seed_read_batch` +
+`query_read_batch` + `paired_adjacency_filter`, which round-trips the
+`(B, S, K)` location tensor and the `(B, S*K)` sorted start lists of both
+mates through HBM.  The fused path is one `pair_frontend` call over the
+padded-row Location Table (backend="auto": the Pallas kernels on TPU, the
+staged jnp oracle elsewhere — on CPU the two paths compute near-identical
+programs, so the ratio approaches 1; the HBM-traffic win shows up on
+TPU).
+
+Derived columns: the intermediate bytes the staged path materializes per
+call, the fused/staged speedup, and (in the `pair_frontend_bitexact` row)
+interpret-kernel-vs-oracle equality for the full op and the post-query
+merge_filter entry — consumed by CI as a workflow artifact.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn, world
+from repro.core.pair_filter import paired_adjacency_filter
+from repro.core.pipeline import PipelineConfig
+from repro.core.query import query_read_batch
+from repro.core.seeding import seed_offsets_tuple, seed_read_batch
+from repro.core.seedmap import INVALID_LOC, to_padded
+from repro.core.simulate import ReadSimConfig, simulate_pairs
+from repro.kernels.pair_frontend import frontend_merge_filter, pair_frontend
+
+R = 150
+SWEEPS = [(256, 16), (1024, 32), (4096, 32)]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _staged(sm, reads1, reads2_fwd, cfg):
+    """Seed-repo math: staged seeding + query + filter."""
+    seeds1 = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                             sm.config.hash_seed)
+    seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
+                             sm.config.hash_seed)
+    q1 = query_read_batch(sm, seeds1, cfg.max_locs_per_seed)
+    q2 = query_read_batch(sm, seeds2, cfg.max_locs_per_seed)
+    return paired_adjacency_filter(q1, q2, cfg.delta, cfg.max_candidates)
+
+
+def _verify_bitexact(ref, sm) -> dict:
+    """Interpret-mode kernels vs the staged oracle on a small world: the
+    full fused op and the post-query merge_filter entry."""
+    rng = np.random.default_rng(5)
+    cfg = PipelineConfig(max_locs_per_seed=8, delta=300, max_candidates=4)
+    psm = to_padded(sm)
+    rows = psm.rows[:, :cfg.max_locs_per_seed]
+    sim = simulate_pairs(ref, 8, ReadSimConfig(sub_rate=2e-3), seed=2)
+    reads1 = jnp.asarray(sim.reads1)
+    reads2_fwd = (3 - jnp.asarray(sim.reads2))[:, ::-1]
+    kw = dict(seed_len=cfg.seed_len, seeds_per_read=cfg.seeds_per_read,
+              hash_seed=sm.config.hash_seed, delta=cfg.delta,
+              max_candidates=cfg.max_candidates, block=4)
+    got = pair_frontend(rows, reads1, reads2_fwd, backend="interpret", **kw)
+    want = pair_frontend(rows, reads1, reads2_fwd, backend="jnp", **kw)
+    fused_ok = all(bool(jnp.array_equal(getattr(got, f), getattr(want, f)))
+                   for f in got._fields)
+
+    locs = rng.integers(0, 1000, (8, 3, 8)).astype(np.int32)
+    locs[rng.random(locs.shape) < 0.4] = INVALID_LOC
+    locs2 = np.clip(locs + rng.integers(-200, 200, locs.shape), 0,
+                    None).astype(np.int32)
+    locs2[locs == INVALID_LOC] = INVALID_LOC
+    offs = seed_offsets_tuple(R, cfg.seed_len, 3)
+    gm = frontend_merge_filter(jnp.asarray(locs), jnp.asarray(locs2), offs,
+                               cfg.delta, 4, block=4, backend="interpret")
+    wm = frontend_merge_filter(jnp.asarray(locs), jnp.asarray(locs2), offs,
+                               cfg.delta, 4, backend="jnp")
+    mf_ok = all(bool(jnp.array_equal(getattr(gm, f), getattr(wm, f)))
+                for f in gm._fields)
+    return {"fused": fused_ok, "merge_filter": mf_ok}
+
+
+def run() -> list[dict]:
+    ref, sm, _ = world(300_000)
+    rows = []
+    for B, K in SWEEPS:
+        cfg = PipelineConfig(max_locs_per_seed=K)
+        psm_rows = to_padded(sm).rows[:, :K]
+        sim = simulate_pairs(ref, B, ReadSimConfig(sub_rate=2e-3),
+                             seed=B + K)
+        reads1 = jnp.asarray(sim.reads1)
+        reads2_fwd = (3 - jnp.asarray(sim.reads2))[:, ::-1]
+
+        us_staged = time_fn(lambda: _staged(sm, reads1, reads2_fwd, cfg))
+        us_fused = time_fn(lambda: pair_frontend(
+            psm_rows, reads1, reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
+            sm.config.hash_seed, cfg.delta, cfg.max_candidates,
+            backend="auto"))
+        S = cfg.seeds_per_read
+        # staged HBM intermediates per call: (B,S,K) locs + (B,S*K) starts,
+        # both mates, int32
+        hbm_mb = 2 * (B * S * K + B * S * K) * 4 / 1e6
+        rows.append(row(f"pair_frontend_staged_B{B}_K{K}", us_staged,
+                        staged_intermediate_mb=round(hbm_mb, 2)))
+        rows.append(row(
+            f"pair_frontend_fused_B{B}_K{K}", us_fused,
+            speedup=round(us_staged / max(us_fused, 1e-9), 3)))
+
+    t0 = time.perf_counter()
+    exact = _verify_bitexact(ref, sm)
+    rows.append(row("pair_frontend_bitexact",
+                    (time.perf_counter() - t0) * 1e6,
+                    bitexact_fused=exact["fused"],
+                    bitexact_merge_filter=exact["merge_filter"]))
+    # Hard gate, not an advisory column: a kernel/oracle divergence must
+    # fail the benchmark job (run.py exits nonzero on module exceptions).
+    assert exact["fused"] and exact["merge_filter"], exact
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -30,6 +30,7 @@ MODULES = [
     ("longread", "benchmarks.bench_longread"),
     ("kernels", "benchmarks.bench_kernels"),
     ("cand_align", "benchmarks.bench_candidate_align"),
+    ("pair_frontend", "benchmarks.bench_pair_frontend"),
 ]
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")

@@ -31,7 +31,10 @@ SCALE = GenPairScale(
 # packed (2-bit) reference — at GRCh38 scale the packed replica is
 # 775 MB/device vs 3.1 GB unpacked, and the fused candidate_align kernel
 # DMAs 4x fewer window bytes.  `packed_ref` is the tri-state
-# PipelineConfig knob (None = per-entry-point default).
+# PipelineConfig knob (None = per-entry-point default).  Both fused-op
+# backends (`frontend_backend` for steps 1-3, `light_backend` for step
+# 4) stay "auto": Pallas on TPU, the staged jnp oracles elsewhere, with
+# REPRO_BACKEND overriding either (kernels/backend.py).
 PIPELINE = PipelineConfig(packed_ref=True)
 SEEDMAP = SeedMapConfig(table_bits=SCALE.table_bits)
 

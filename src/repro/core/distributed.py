@@ -90,14 +90,15 @@ def _local_query(offsets, locations, shard_id, hashes, cfg: SeedMapConfig, K: in
     return locs, count
 
 
-def make_sharded_query(mesh: Mesh, model_axis: str = "model",
-                       batch_axes=("data",)):
-    """Build a shard_map'd SeedMap query over `mesh`.
+def make_sharded_locs(mesh: Mesh, model_axis: str = "model",
+                      batch_axes=("data",)):
+    """Build the raw shard_map'd SeedMap lookup over `mesh`.
 
-    Returns query_fn(ssm: ShardedSeedMap, hashes (B, S) u32, seed_offsets,
-    K) -> QueryResult with starts (B, S*K).  Tables are sharded along
-    `model_axis`; the batch along `batch_axes`; results end up sharded along
-    the batch axes and replicated along model.
+    Returns locs_fn(ssm, hashes (B, S) u32, K) -> (B, S, K) int32
+    locations (INVALID_LOC padded): tables sharded along `model_axis`,
+    batch along `batch_axes`, result sharded along the batch axes and
+    replicated along model.  This is the un-merged half that both
+    `make_sharded_query` and the fused front end build on.
     """
 
     def _inner(offsets, locations, hashes, K, cfg):
@@ -109,20 +110,73 @@ def make_sharded_query(mesh: Mesh, model_axis: str = "model",
         locs = jax.lax.pmin(locs, model_axis)
         return locs
 
-    def query_fn(ssm: ShardedSeedMap, hashes: jnp.ndarray,
-                 seed_offsets: jnp.ndarray, K: int) -> QueryResult:
-        cfg = ssm.config
+    def locs_fn(ssm: ShardedSeedMap, hashes: jnp.ndarray,
+                K: int) -> jnp.ndarray:
         batch_spec = P(batch_axes)
         fn = shard_map(
-            functools.partial(_inner, K=K, cfg=cfg),
+            functools.partial(_inner, K=K, cfg=ssm.config),
             mesh=mesh,
             in_specs=(P(model_axis), P(model_axis), batch_spec),
             out_specs=batch_spec,
         )
-        locs = fn(ssm.offsets, ssm.locations, hashes)
-        return merge_read_starts(locs, seed_offsets)
+        return fn(ssm.offsets, ssm.locations, hashes)
+
+    return locs_fn
+
+
+def make_sharded_query(mesh: Mesh, model_axis: str = "model",
+                       batch_axes=("data",)):
+    """Build a shard_map'd SeedMap query over `mesh`.
+
+    Returns query_fn(ssm: ShardedSeedMap, hashes (B, S) u32, seed_offsets,
+    K) -> QueryResult with starts (B, S*K).  Tables are sharded along
+    `model_axis`; the batch along `batch_axes`; results end up sharded along
+    the batch axes and replicated along model.
+    """
+    locs_fn = make_sharded_locs(mesh, model_axis, batch_axes)
+
+    def query_fn(ssm: ShardedSeedMap, hashes: jnp.ndarray,
+                 seed_offsets: jnp.ndarray, K: int) -> QueryResult:
+        return merge_read_starts(locs_fn(ssm, hashes, K), seed_offsets)
 
     return query_fn
+
+
+def make_distributed_frontend(mesh: Mesh, cfg: PipelineConfig,
+                              model_axis: str = "model",
+                              batch_axes=("data",)):
+    """Sharded pipeline front end: bucket-sharded SeedMap lookup + the
+    fused merge/filter half of `kernels/pair_frontend`.
+
+    Returns frontend_fn(ssm, reads1, reads2_fwd) -> FrontendResult (both
+    reads in reference orientation).  The lookup runs under shard_map
+    (the NMSL channel-striping analogue); conversion + sorted merge +
+    Δ-adjacency filter + compaction run in one per-device kernel behind
+    ``cfg.frontend_backend`` — the per-read (B, S*K) start lists never
+    reach HBM on the kernel backends.
+    """
+    from repro.core.seeding import seed_offsets_tuple, seed_read_batch
+    from repro.kernels.pair_frontend.ops import frontend_merge_filter
+
+    locs_fn = make_sharded_locs(mesh, model_axis, batch_axes)
+
+    def frontend_fn(ssm: ShardedSeedMap, reads1: jnp.ndarray,
+                    reads2_fwd: jnp.ndarray):
+        sm_cfg = ssm.config
+        R = reads1.shape[1]
+        seeds1 = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                                 sm_cfg.hash_seed)
+        seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len,
+                                 cfg.seeds_per_read, sm_cfg.hash_seed)
+        K = cfg.max_locs_per_seed
+        locs1 = locs_fn(ssm, seeds1.hashes, K)
+        locs2 = locs_fn(ssm, seeds2.hashes, K)
+        offs = seed_offsets_tuple(R, cfg.seed_len, cfg.seeds_per_read)
+        return frontend_merge_filter(locs1, locs2, offs, cfg.delta,
+                                     cfg.max_candidates,
+                                     backend=cfg.frontend_backend)
+
+    return frontend_fn
 
 
 def make_distributed_map_pairs(mesh: Mesh, cfg: PipelineConfig,

@@ -4,7 +4,11 @@ This is the dry-run / deployment entry for the genomics pipeline itself
 (`--arch genpair`): SeedMap sharded by bucket range across the `model` axis
 (the NMSL channel-striping analogue), read batch sharded across
 (`pod`,)`data`, reference 2-bit packed and replicated, Light Alignment and
-DP fallback fully data-parallel.
+DP fallback fully data-parallel.  The post-query front end (start
+conversion + sorted merge + Δ filter) runs as the fused
+`kernels/pair_frontend` merge_filter op behind `cfg.frontend_backend`;
+the lookup itself stays under shard_map because the tables are
+bucket-sharded.
 
 At human-genome scale (GRCh38): T = 2^30 buckets, ~3.0e9 locations,
 packed reference 775 MB/device, per-device Location Table shard ~750 MB.
@@ -30,14 +34,13 @@ from repro.core.encoding import (
     unpack_2bit,
 )
 from repro.core.light_align import gather_ref_windows
-from repro.core.pair_filter import paired_adjacency_filter
 from repro.kernels.candidate_align.ops import candidate_pair_align
+from repro.kernels.pair_frontend.ops import frontend_merge_filter
 from repro.core.pipeline import (
     M_DP, M_DP_OVERFLOW, M_LIGHT, M_RESIDUAL_FULL, M_UNMAPPED, MapResult,
     PipelineConfig,
 )
-from repro.core.query import merge_read_starts
-from repro.core.seeding import seed_read_batch
+from repro.core.seeding import seed_offsets_tuple, seed_read_batch
 from repro.core.seedmap import INVALID_LOC, SeedMapConfig
 
 
@@ -110,11 +113,16 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
                                  cfg.seeds_per_read, sm_cfg.hash_seed)
         locs1 = _sharded_query(offsets, locations, seeds1.hashes)
         locs2 = _sharded_query(offsets, locations, seeds2.hashes)
-        q1 = merge_read_starts(locs1, seeds1.offsets)
-        q2 = merge_read_starts(locs2, seeds2.offsets)
-        had_hits = (q1.n_hits > 0) & (q2.n_hits > 0)
-        cands = paired_adjacency_filter(q1, q2, cfg.delta,
-                                        cfg.max_candidates)
+        # Steps 2.5-3 fused (`kernels/pair_frontend`): start conversion +
+        # sorted merge + Δ filter + compaction in one op.  The SeedMap
+        # lookup itself stays under shard_map (tables are bucket-sharded
+        # along `model`), so the serve step uses the post-query entry.
+        fe = frontend_merge_filter(
+            locs1, locs2,
+            seed_offsets_tuple(R, cfg.seed_len, cfg.seeds_per_read),
+            cfg.delta, cfg.max_candidates, backend=cfg.frontend_backend)
+        had_hits = (fe.n_hits1 > 0) & (fe.n_hits2 > 0)
+        cands = fe
         passed = cands.n > 0
 
         # Fused step 4: packed-window gather + G2 prescreen + Light

@@ -4,11 +4,18 @@ The paper's ASIC iterates two sorted location FIFOs with a two-pointer
 merge, emitting (loc1, loc2) pairs with |loc1 - loc2| < Δ.  A sequential
 merge is the wrong shape for a 8x128-lane VPU, so we instead binary-search
 (`searchsorted`) every read-1 start against the sorted read-2 list — the
-same output set, O(M log M) fully parallel (DESIGN.md §2).
+same output set, O(M log M) fully parallel (DESIGN.md §2).  Occurrence k
+of a read-1 start duplicated by several seeds probes the (k+1)-th
+in-range read-2 start, so multiple mate-2 placements near the same
+mate-1 start each emit a candidate; exact duplicate (start1, start2)
+pairs collapse to one.
 
 Output is a fixed-capacity candidate set: valid candidates are compacted to
 the front (hardware analogue: the bounded candidate FIFO between the filter
 and the Light Alignment modules).
+
+This module is also the bit-exact jnp oracle for the fused
+`kernels/pair_frontend` op (together with seeding.py and query.py).
 """
 from __future__ import annotations
 
@@ -37,26 +44,37 @@ def _row_filter(starts1, starts2, delta, cap):
     """Single read-pair filtering. starts*: (M,) sorted int32."""
     M = starts1.shape[0]
     valid1 = starts1 != INVALID_LOC
-    # Nearest read-2 start >= starts1 - delta.
+    # First read-2 start >= starts1 - delta.  A read-1 start duplicated by
+    # several seeds probes *successive* read-2 starts (occurrence k probes
+    # the (k+1)-th in-range partner), so distinct mate-2 placements within
+    # Δ of the same mate-1 start each surface as their own candidate
+    # instead of collapsing onto the nearest one.
     lo = jnp.searchsorted(starts2, starts1 - delta, side="left")
-    lo = jnp.clip(lo, 0, M - 1)
-    s2 = starts2[lo]
+    occ = jnp.arange(M, dtype=lo.dtype) - jnp.searchsorted(
+        starts1, starts1, side="left")
+    s2 = starts2[jnp.clip(lo + occ, 0, M - 1)]
     within = (s2 != INVALID_LOC) & (jnp.abs(s2 - starts1) <= delta) & valid1
-    # Dedup: same read-start found via several seeds appears repeatedly in the
-    # sorted list; keep the first occurrence only.
+    # Dedup on the (start1, start2) *pair*: duplicates of a read-1 start
+    # are contiguous in the sorted list and probe non-decreasing partners,
+    # so equal pairs are adjacent and an adjacent-compare suffices.
     first = jnp.concatenate(
-        [jnp.array([True]), starts1[1:] != starts1[:-1]]
+        [jnp.array([True]),
+         (starts1[1:] != starts1[:-1]) | (s2[1:] != s2[:-1])]
     )
     keep = within & first
     # Compact valid candidates to the front, preserving position order.
     order = jnp.argsort(~keep, stable=True)
     take = order[:cap]
     ok = keep[take]
-    return (
-        jnp.where(ok, starts1[take], INVALID_LOC),
-        jnp.where(ok, s2[take], INVALID_LOC),
-        keep.sum().astype(jnp.int32),
-    )
+    pos1 = jnp.where(ok, starts1[take], INVALID_LOC)
+    pos2 = jnp.where(ok, s2[take], INVALID_LOC)
+    if cap > M:
+        # Fewer than cap source elements: pad to the full (cap,) output
+        # shape (the fused pair_frontend kernel always emits cap slots).
+        pad = jnp.full((cap - M,), INVALID_LOC, jnp.int32)
+        pos1 = jnp.concatenate([pos1, pad])
+        pos2 = jnp.concatenate([pos2, pad])
+    return pos1, pos2, keep.sum().astype(jnp.int32)
 
 
 def paired_adjacency_filter(

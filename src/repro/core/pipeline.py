@@ -1,10 +1,24 @@
 """GenPair online pipeline (§4.1, Fig. 3): the paper's four steps end to end.
 
-  1. Partitioned Seeding   (repro.core.seeding)
-  2. SeedMap Query         (repro.core.query)
+Each pipeline step maps onto a kernel family (all behind the shared
+backend layer, `repro/kernels/backend.py`):
+
+  1. Partitioned Seeding   (repro.core.seeding)    -> kernels/pair_frontend
+  2. SeedMap Query         (repro.core.query)      -> kernels/pair_frontend
   3. Paired-Adjacency Filtering (repro.core.pair_filter)
-  4. Light Alignment       (repro.core.light_align)
+                                                   -> kernels/pair_frontend
+  4. Light Alignment       (repro.core.light_align)-> kernels/candidate_align
   +  DP fallback           (repro.core.dp_fallback) for residual pairs
+                                                   (kernels/banded_sw is the
+                                                    standalone DP family)
+
+Steps 1-3 are one fused `pair_frontend` op under
+``cfg.frontend_backend`` (the core modules are its bit-exact jnp
+oracle); step 4 plus the best-pair reduction is one fused
+`candidate_align` op under ``cfg.light_backend``.  The standalone
+`kernels/xxhash` and `kernels/seed_gather` families are the front end's
+building blocks (hashing unit, NMSL row gather) kept callable on their
+own.
 
 The whole pipeline is one jit-able function over fixed-shape batches.
 Residual pairs are routed through a **fixed-capacity DP buffer**: the batch
@@ -33,10 +47,11 @@ from repro.core.encoding import gather_windows_packed, pack_2bit
 from repro.core.light_align import gather_ref_windows
 from repro.core.dp_fallback import gotoh_semiglobal
 from repro.core.pair_filter import CandidateSet, paired_adjacency_filter
-from repro.core.query import query_read_batch
+from repro.core.query import padded_rows_device, query_read_batch
 from repro.core.scoring import Scoring
 from repro.core.seeding import seed_read_batch
-from repro.core.seedmap import INVALID_LOC, SeedMap
+from repro.core.seedmap import INVALID_LOC, PaddedSeedMap, SeedMap
+from repro.kernels.backend import resolve_backend
 
 M_UNMAPPED, M_LIGHT, M_DP, M_RESIDUAL_FULL, M_DP_OVERFLOW = 0, 1, 2, 3, 4
 
@@ -64,6 +79,13 @@ class PipelineConfig:
     # Backend for the fused candidate light-alignment op ("auto" resolves
     # to the Pallas kernel on TPU, the bit-exact jnp oracle elsewhere).
     light_backend: str = "auto"
+    # Backend for the fused front end (steps 1-3: seeding + SeedMap query
+    # + Paired-Adjacency filter as one `pair_frontend` op).  Same
+    # resolution rules; the staged seeding/query/pair_filter modules are
+    # the "jnp" oracle.  On the kernel backends `map_pairs` needs the
+    # padded-row Location Table: pass a `PaddedSeedMap` (preferred), or a
+    # CSR `SeedMap` which is re-laid-out in-jit at test scales.
+    frontend_backend: str = "auto"
     # Run the whole pipeline (candidate windows + DP fallback windows)
     # against the 2-bit packed reference: 4x less HBM window traffic, the
     # paper's SRAM encoding (§7.4).  Tri-state: None keeps each entry
@@ -150,7 +172,7 @@ class _Seeded(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def map_pairs(
-    sm: SeedMap,
+    sm: SeedMap | PaddedSeedMap,
     ref: jnp.ndarray,
     reads1: jnp.ndarray,
     reads2: jnp.ndarray,
@@ -161,24 +183,47 @@ def map_pairs(
     ``ref`` is the (L,) uint8 base array; with ``cfg.packed_ref=True`` it
     may instead be the (Lw,) uint32 2-bit packing (`pack_2bit`), which
     skips the in-step repack.
+
+    ``sm`` is the CSR `SeedMap` or the kernel-layout `PaddedSeedMap`
+    (`to_padded`).  The kernel front-end backends gather rows from the
+    padded layout; handing them a CSR map re-lays it out in-jit
+    (`padded_rows_device` — test scales only).  The padded row width
+    caps locations per seed, superseding ``cfg.max_locs_per_seed``.
     """
     B, R = reads1.shape
     assert R == cfg.read_len, (R, cfg.read_len)
     reads2_fwd = (3 - reads2)[:, ::-1]  # reference orientation (revcomp)
 
-    # -- 1. Partitioned Seeding + 2. SeedMap Query ----------------------
-    seeds1 = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
-                             sm.config.hash_seed)
-    seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
-                             sm.config.hash_seed)
-    q1 = query_read_batch(sm, seeds1, cfg.max_locs_per_seed)
-    q2 = query_read_batch(sm, seeds2, cfg.max_locs_per_seed)
-    had_hits = (q1.n_hits > 0) & (q2.n_hits > 0)
+    # -- 1-3. Front end: seeding + SeedMap query + adjacency filter -------
+    # One fused `pair_frontend` op (kernel backends: the (B, S, K)
+    # location tensor and the (B, S*K) sorted start lists stay in VMEM).
+    # The staged core modules remain the bit-exact jnp path.  Imported at
+    # call time for the same core-package circularity reason as the
+    # candidate_align import below.
+    from repro.kernels.pair_frontend.ops import pair_frontend
 
-    # -- 3. Paired-Adjacency Filtering ----------------------------------
-    cands: CandidateSet = paired_adjacency_filter(
-        q1, q2, cfg.delta, cfg.max_candidates
-    )
+    fe_backend = resolve_backend(cfg.frontend_backend,
+                                 family="pair_frontend")
+    if isinstance(sm, SeedMap) and fe_backend == "jnp":
+        seeds1 = seed_read_batch(reads1, cfg.seed_len, cfg.seeds_per_read,
+                                 sm.config.hash_seed)
+        seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len,
+                                 cfg.seeds_per_read, sm.config.hash_seed)
+        q1 = query_read_batch(sm, seeds1, cfg.max_locs_per_seed)
+        q2 = query_read_batch(sm, seeds2, cfg.max_locs_per_seed)
+        had_hits = (q1.n_hits > 0) & (q2.n_hits > 0)
+        cands: CandidateSet = paired_adjacency_filter(
+            q1, q2, cfg.delta, cfg.max_candidates
+        )
+    else:
+        rows = (sm.rows if isinstance(sm, PaddedSeedMap)
+                else padded_rows_device(sm, cfg.max_locs_per_seed))
+        fe = pair_frontend(
+            rows, reads1, reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
+            sm.config.hash_seed, cfg.delta, cfg.max_candidates,
+            backend=fe_backend)
+        had_hits = (fe.n_hits1 > 0) & (fe.n_hits2 > 0)
+        cands = CandidateSet(pos1=fe.pos1, pos2=fe.pos2, n=fe.n)
     passed = cands.n > 0
 
     # -- 4. Light Alignment over candidates (fused kernel) ---------------

@@ -56,6 +56,20 @@ def query_padded(
     return psm.rows[bucket], psm.counts[bucket]
 
 
+def padded_rows_device(sm: SeedMap, cap: int) -> jnp.ndarray:
+    """In-jit CSR -> (T, cap) padded rows (device-side `to_padded` analog).
+
+    Delegates to `query_csr` over every bucket id (``arange(T) & (T-1)``
+    is the identity), so a row gather from the result is bit-identical to
+    the CSR query at K = cap by construction.  Materializes T*cap int32 —
+    fine at test scale; production callers should build a `PaddedSeedMap`
+    host-side once (`to_padded`) instead of paying this per trace.
+    """
+    T = sm.config.table_size
+    locs, _ = query_csr(sm, jnp.arange(T, dtype=jnp.uint32), cap)
+    return locs
+
+
 def merge_read_starts(
     locs: jnp.ndarray, seed_offsets: jnp.ndarray
 ) -> QueryResult:

@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.encoding import pack_2bit, revcomp
 from repro.core.hashing import xxhash32_words
@@ -29,18 +30,38 @@ class SeedSet(NamedTuple):
     offsets: jnp.ndarray
 
 
-def seed_offsets(read_len: int, seed_len: int, seeds_per_read: int = 3) -> jnp.ndarray:
-    """First/middle/last non-overlapping placement (generalizes to >3)."""
+def seed_offsets_np(read_len: int, seed_len: int,
+                    seeds_per_read: int = 3) -> np.ndarray:
+    """Host-side mirror of :func:`seed_offsets`.
+
+    The fused pair_frontend kernel needs the placements as static Python
+    ints at trace time; both flavors share this formula (numpy and jnp
+    round half-to-even identically), so the kernel's in-VMEM seed
+    extraction stays bit-aligned with the staged oracle.
+    """
     if seeds_per_read * seed_len > read_len:
         raise ValueError(
             f"{seeds_per_read} seeds of {seed_len} bp do not fit a {read_len} bp read"
         )
     if seeds_per_read == 1:
-        return jnp.array([0], dtype=jnp.int32)
+        return np.array([0], dtype=np.int32)
     span = read_len - seed_len
-    return jnp.round(jnp.arange(seeds_per_read) * span / (seeds_per_read - 1)).astype(
-        jnp.int32
-    )
+    return np.round(
+        np.arange(seeds_per_read) * span / (seeds_per_read - 1)
+    ).astype(np.int32)
+
+
+def seed_offsets_tuple(read_len: int, seed_len: int,
+                       seeds_per_read: int = 3) -> tuple[int, ...]:
+    """Placements as a tuple of Python ints — the static-argument form
+    the fused pair_frontend kernels take (hashable, trace-time)."""
+    return tuple(int(o) for o in
+                 seed_offsets_np(read_len, seed_len, seeds_per_read))
+
+
+def seed_offsets(read_len: int, seed_len: int, seeds_per_read: int = 3) -> jnp.ndarray:
+    """First/middle/last non-overlapping placement (generalizes to >3)."""
+    return jnp.asarray(seed_offsets_np(read_len, seed_len, seeds_per_read))
 
 
 def extract_seeds(reads: jnp.ndarray, seed_len: int, seeds_per_read: int = 3) -> jnp.ndarray:

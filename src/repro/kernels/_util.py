@@ -1,0 +1,32 @@
+"""Shared launch plumbing for the fused-op ops.py wrappers.
+
+Ops whose Pallas launches carry scalar-prefetch DMA tables (SMEM) chunk
+large batches into bounded launches; the pad-and-chunk protocol is the
+same for every family, so it lives here once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_rows(x: jnp.ndarray, total: int) -> jnp.ndarray:
+    """Zero-pad axis 0 of ``x`` up to ``total`` rows (no-op if equal)."""
+    if total == x.shape[0]:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((total - x.shape[0],) + x.shape[1:], x.dtype)], 0)
+
+
+def chunked_launch(n_rows: int, block: int, launch_rows: int) -> tuple[int, int]:
+    """(padded_total, rows_per_launch) for a ``block``-aligned batch.
+
+    Batches above ``launch_rows`` are padded to a multiple of the largest
+    block-aligned chunk <= ``launch_rows`` and launched chunk by chunk
+    (every chunk shares one trace/compile — identical shapes); smaller
+    batches pad to one block-aligned launch.
+    """
+    chunk = max(block, launch_rows - launch_rows % block)
+    padded = n_rows + ((-n_rows) % block)
+    if padded > chunk:
+        padded = n_rows + ((-n_rows) % chunk)
+    return padded, min(padded, chunk)

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.core.dp_fallback import DPResult
 from repro.core.scoring import Scoring
+from repro.kernels.backend import resolve_backend
 from repro.kernels.banded_sw.kernel import DEFAULT_BLOCK, banded_sw_pallas
 from repro.kernels.banded_sw.ref import gotoh_ref
 
@@ -21,8 +22,7 @@ def banded_sw(
     backend: str = "auto",
 ) -> DPResult:
     """Batched semiglobal Gotoh with kernel/oracle backend switch."""
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    backend = resolve_backend(backend, family="banded_sw")
     if backend == "jnp":
         return gotoh_ref(read, win, scoring)
     B, R = read.shape

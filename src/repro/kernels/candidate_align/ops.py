@@ -10,7 +10,6 @@ which never materializes the `(B, C, R+2E)` window tensor in HBM.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,8 @@ import jax.numpy as jnp
 from repro.core.encoding import BASES_PER_WORD, packed_gather_coords
 from repro.core.scoring import Scoring
 from repro.core.seedmap import INVALID_LOC
+from repro.kernels._util import chunked_launch, pad_rows
+from repro.kernels.backend import resolve_backend
 from repro.kernels.candidate_align.kernel import (
     DEFAULT_BLOCK,
     LAUNCH_ROWS,
@@ -52,21 +53,18 @@ def candidate_pair_align(
 ) -> PairAlignResult:
     """Fused best-candidate Light Alignment for a batch of read pairs.
 
-    ``backend="auto"`` resolves to the Pallas kernel on TPU and the jnp
-    oracle elsewhere; the ``REPRO_LIGHT_BACKEND`` env var overrides the
-    auto choice (CI uses it to drive the whole pipeline through the
-    interpret-mode kernel on CPU).  The override is read at trace time, so
+    ``backend="auto"`` resolves through ``kernels/backend.py``: the Pallas
+    kernel on TPU, the jnp oracle elsewhere, with the ``REPRO_BACKEND``
+    env var (or its deprecated ``REPRO_LIGHT_BACKEND`` alias) overriding
+    the auto choice — CI uses it to drive the whole pipeline through the
+    interpret-mode kernels on CPU.  The override is read at trace time, so
     set it before the first call in a process.
     """
-    if backend == "auto":
-        backend = os.environ.get("REPRO_LIGHT_BACKEND") or (
-            "pallas" if jax.default_backend() == "tpu" else "jnp")
+    backend = resolve_backend(backend, family="candidate_align")
     if backend == "jnp":
         return candidate_pair_align_ref(
             ref, reads1, reads2, pos1, pos2, max_gap, scoring, threshold,
             mode, prescreen_top, packed_ref)
-    if backend not in ("pallas", "interpret"):
-        raise ValueError(f"unknown backend {backend!r}")
 
     B, R = reads1.shape
     C = pos1.shape[1]
@@ -116,19 +114,9 @@ def candidate_pair_align(
     # Chunk the launch so the scalar-prefetch DMA tables (SMEM, 2*rows*C*4
     # bytes per launch) stay bounded for arbitrarily large batches; every
     # chunk shares one trace/compile (identical shapes).
-    chunk = max(block, LAUNCH_ROWS - LAUNCH_ROWS % block)
-    total = B + ((-B) % block)
-    if total > chunk:
-        total = B + ((-B) % chunk)
-    rows = min(total, chunk)
+    total, rows = chunked_launch(B, block, LAUNCH_ROWS)
 
-    def padded(x):
-        if total == B:
-            return x
-        return jnp.concatenate(
-            [x, jnp.zeros((total - B,) + x.shape[1:], x.dtype)], 0)
-
-    ins = tuple(padded(x) for x in (
+    ins = tuple(pad_rows(x, total) for x in (
         reads1.astype(jnp.int32), reads2.astype(jnp.int32),
         sdma1, sdma2, off1, off2,
         valid1.astype(jnp.int32), valid2.astype(jnp.int32)))

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_backend
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -29,8 +30,7 @@ def flash_attention(
     Pads S up to the block size and D is used as-is (callers pass
     MXU-friendly dims on real hardware).
     """
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    backend = resolve_backend(backend, family="flash_attention")
     if backend == "jnp":
         return attention_ref(q, k, v, causal, sm_scale)
     BH, S, D = q.shape

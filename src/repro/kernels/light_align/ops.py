@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.core.light_align import LightAlignResult
 from repro.core.scoring import Scoring
+from repro.kernels.backend import resolve_backend
 from repro.kernels.light_align.kernel import DEFAULT_BLOCK, light_align_pallas
 from repro.kernels.light_align.ref import light_align_ref
 
@@ -28,8 +29,7 @@ def light_align(
     backend: str = "auto",
 ) -> LightAlignResult:
     """Batched Light Alignment with kernel/oracle backend switch."""
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    backend = resolve_backend(backend, family="light_align")
     if backend == "jnp":
         return light_align_ref(read, refwin, max_gap, scoring, threshold, mode)
     B, R = read.shape

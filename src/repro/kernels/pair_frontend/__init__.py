@@ -1,0 +1,7 @@
+from repro.kernels.pair_frontend.ops import (
+    FrontendResult,
+    frontend_merge_filter,
+    pair_frontend,
+)
+
+__all__ = ["FrontendResult", "frontend_merge_filter", "pair_frontend"]

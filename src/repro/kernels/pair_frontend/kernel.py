@@ -1,0 +1,325 @@
+"""Pallas TPU kernels: fused pipeline front end (§4, Fig. 3 steps 1-3).
+
+Fuses the memory-intensive front end of `map_pairs` — Partitioned Seeding
+(2-bit packing + xxHash32, §4.3), the SeedMap padded-row lookup (§4.4) and
+Paired-Adjacency Filtering (§4.5) — so the per-read `(B, S*K)` sorted
+start lists and the `(B, S, K)` location tensor never round-trip through
+HBM.  This is the TPU analogue of the paper's NMSL memory subsystem: the
+Location Table stays in HBM, each grid step DMAs only the `2*S*BLK` rows
+it is about to merge into VMEM, and only the `(B, C)` candidate set plus
+the per-read hit counts are written back.
+
+Two kernels, one op
+-------------------
+The row-gather DMAs are aimed by scalar-prefetch tables of *flattened row
+offsets* (`bucket * K`), and scalar-prefetch operands must exist before
+the launch, so the fused op runs as two back-to-back kernels:
+
+  1. `seed_buckets_pallas` — in-VMEM seed extraction + 2-bit packing +
+     xxHash32 (reusing `kernels/xxhash`'s `xxhash32_lanes` hashing unit,
+     the paper's 6-way Partitioned Seeding module) -> `(B, S)` bucket ids.
+  2. `pair_frontend_pallas` — scalar-prefetch row-gather (the
+     `kernels/seed_gather` NMSL idiom, but S rows per read and fused with
+     the consumer), location->read-start conversion, in-VMEM sorted merge,
+     Δ-adjacency filter and front-compaction -> `CandidateSet` arrays.
+
+Only the tiny `(B, S)` int32 bucket tensor (4 B/seed — exactly the
+paper's centralized-buffer traffic, §5.2) crosses HBM between the two.
+
+In-VMEM sorted merge
+--------------------
+`jnp.sort` has no Mosaic lowering, so the merge uses the same
+stable-rank one-hot idiom as the candidate_align prescreen: rank every
+element by `#{j : x_j < x_i or (x_j == x_i and j < i)}` with one
+`(BLK, M, M)` compare, then scatter values to their rank with a one-hot
+sum.  M = S*K (96 at the paper's S=3, K=32), so the compare tensors are
+a few hundred KB of VMEM at the default block.
+
+The Δ filter mirrors `pair_filter._row_filter` exactly: a broadcast-
+compare `searchsorted`, per-occurrence partner probing (duplicate
+read-1 starts probe successive read-2 starts), `(start1, start2)` pair
+dedup via adjacent-compare, and cumulative-sum front compaction.
+
+The DMA protocol is start-all/wait-all per grid step (the seed
+candidate_align protocol); cross-step ping-pong double-buffering is a
+known follow-up (ROADMAP).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.seedmap import INVALID_LOC
+from repro.kernels.xxhash.kernel import xxhash32_lanes
+
+DEFAULT_BLOCK = 8        # batch rows per grid step (2*S row DMAs each)
+HASH_BLOCK = 128         # rows per seed_buckets grid step
+MAX_SEED_WORDS = 4       # 16-byte hash input: seed_len <= 64
+
+# Rows per pallas launch (ops.py chunks bigger batches): the two (rows, S)
+# scalar-prefetch DMA tables are SMEM-resident, so bound them the same way
+# candidate_align bounds its tables — 2048 rows * S=3 is 48 KB.
+LAUNCH_ROWS = 2048
+
+
+# --------------------------------------------------------------- hashing --
+def _seed_bucket_kernel(reads_ref, out_ref, *, offs, seed_len: int,
+                        hash_seed: int, mask: int):
+    """(BLK, R) int32 base codes -> (BLK, S) int32 SeedMap bucket ids."""
+    reads = reads_ref[...]
+    n_full, rem = divmod(seed_len, 16)
+    cols = []
+    for off in offs:
+        words = []
+        for w in range(MAX_SEED_WORDS):
+            # 2-bit pack bases [off+16w, off+16w+cnt) little-endian; words
+            # past the seed are zero (pack_seed_words' zero padding).
+            cnt = 16 if w < n_full else (rem if w == n_full else 0)
+            acc = jnp.zeros((reads.shape[0], 1), jnp.uint32)
+            for i in range(cnt):
+                b = reads[:, off + 16 * w + i : off + 16 * w + i + 1]
+                acc = acc | (b.astype(jnp.uint32) << jnp.uint32(2 * i))
+            words.append(acc)
+        h = xxhash32_lanes(*words, seed=hash_seed)
+        cols.append((h & jnp.uint32(mask)).astype(jnp.int32))
+    out_ref[...] = jnp.concatenate(cols, axis=1)
+
+
+def seed_buckets_pallas(
+    reads: jnp.ndarray,      # (N, R) int32, N a multiple of `block`
+    offs: tuple,             # static per-seed offsets within the read
+    seed_len: int,
+    hash_seed: int,
+    table_size: int,
+    block: int = HASH_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(N, R) reads -> (N, S) bucket ids (ops.py pads N)."""
+    n, R = reads.shape
+    assert n % block == 0, (n, block)
+    assert seed_len <= 16 * MAX_SEED_WORDS, seed_len
+    S = len(offs)
+    return pl.pallas_call(
+        functools.partial(_seed_bucket_kernel, offs=offs, seed_len=seed_len,
+                          hash_seed=hash_seed, mask=table_size - 1),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, R), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, S), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, S), jnp.int32),
+        interpret=interpret,
+    )(reads)
+
+
+# ---------------------------------------------------------- merge+filter --
+def _sort_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """(BLK, M) int32 -> ascending per row (stable-rank one-hot scatter)."""
+    BLK, M = x.shape
+    xi = x[:, :, None]
+    xj = x[:, None, :]
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (BLK, M, M), 1)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (BLK, M, M), 2)
+    ahead = (xj < xi) | ((xj == xi) & (j_idx < i_idx))
+    rank = jnp.sum(ahead.astype(jnp.int32), axis=2)          # (BLK, M)
+    # scatter: sorted[m] = x[i] where rank[i] == m (ranks are a permutation)
+    hot = rank[:, :, None] == j_idx
+    return jnp.sum(jnp.where(hot, xi, 0), axis=1)
+
+
+def merge_filter_block(l1, l2, *, seed_offs, K: int, delta: int, cap: int):
+    """The fused front-end math on one resident block.
+
+    l1, l2: (BLK, M = S*K) int32 raw per-seed locations, seed-major
+    (element s*K + k is location k of seed s), INVALID_LOC padded.
+    Mirrors `merge_read_starts` + `pair_filter._row_filter` bit-for-bit.
+    Returns (pos1, pos2) (BLK, cap) and (n, nh1, nh2) (BLK, 1) int32.
+    """
+    BLK, M = l1.shape
+    # Per-element seed offset, built from iota + static scalars (Pallas
+    # kernels cannot capture constant arrays).
+    seed_of = jax.lax.broadcasted_iota(jnp.int32, (1, M), 1) // K
+    offv = jnp.zeros((1, M), jnp.int32)
+    for s, off in enumerate(seed_offs):
+        offv = jnp.where(seed_of == s, jnp.int32(off), offv)
+
+    def starts_of(locs):
+        valid = locs != INVALID_LOC
+        starts = jnp.where(valid, locs - offv, INVALID_LOC)
+        return (_sort_rows(starts),
+                jnp.sum(valid.astype(jnp.int32), axis=1, keepdims=True))
+
+    s1, nh1 = starts_of(l1)
+    s2, nh2 = starts_of(l2)
+
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (BLK, M, M), 1)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (BLK, M, M), 2)
+    v1 = s1[:, :, None]
+    # searchsorted(side="left") == #{j : s2_j < v - Δ}; occurrence k of a
+    # duplicated read-1 start probes partner lo+k (pair_filter semantics).
+    lo = jnp.sum((s2[:, None, :] < v1 - delta).astype(jnp.int32), axis=2)
+    occ = jnp.sum(((s1[:, None, :] == v1) & (j_idx < i_idx)).astype(jnp.int32),
+                  axis=2)
+    idx = jnp.clip(lo + occ, 0, M - 1)
+    hot = idx[:, :, None] == j_idx
+    p2 = jnp.sum(jnp.where(hot, s2[:, None, :], 0), axis=2)  # (BLK, M)
+
+    within = ((p2 != INVALID_LOC) & (jnp.abs(p2 - s1) <= delta)
+              & (s1 != INVALID_LOC))
+    prev_same = jnp.concatenate(
+        [jnp.zeros((BLK, 1), jnp.bool_),
+         (s1[:, 1:] == s1[:, :-1]) & (p2[:, 1:] == p2[:, :-1])], axis=1)
+    keep = within & ~prev_same
+
+    # Front compaction: kept element i lands at slot #{j < i : keep_j}.
+    cpos = jnp.sum((keep[:, None, :] & (j_idx < i_idx)).astype(jnp.int32),
+                   axis=2)
+    c_idx = jax.lax.broadcasted_iota(jnp.int32, (BLK, M, cap), 2)
+    sel = keep[:, :, None] & (cpos[:, :, None] == c_idx)     # (BLK, M, cap)
+    pos1 = jnp.sum(jnp.where(sel, s1[:, :, None], 0), axis=1)
+    pos2 = jnp.sum(jnp.where(sel, p2[:, :, None], 0), axis=1)
+    nkeep = jnp.sum(keep.astype(jnp.int32), axis=1, keepdims=True)
+    filled = jax.lax.broadcasted_iota(jnp.int32, (BLK, cap), 1) < nkeep
+    pos1 = jnp.where(filled, pos1, INVALID_LOC)
+    pos2 = jnp.where(filled, pos2, INVALID_LOC)
+    return pos1, pos2, jnp.minimum(nkeep, cap), nh1, nh2
+
+
+# ------------------------------------------------- fused gather + filter --
+def _frontend_kernel(
+    # scalar prefetch: full (B, S) int32 flattened-row-offset tables, SMEM
+    sdma1_ref, sdma2_ref,
+    # inputs
+    table_any,                   # (T*K,) int32 ANY/HBM: padded location rows
+    # outputs
+    pos1_ref, pos2_ref,          # (BLK, C) int32
+    n_ref, nh1_ref, nh2_ref,     # (BLK, 1) int32
+    # scratch
+    loc1, loc2,                  # (BLK, S*K) int32 VMEM
+    sems,                        # (2, BLK, S) DMA semaphores
+    *,
+    S: int, K: int, seed_offs: tuple, delta: int, cap: int,
+):
+    BLK = pos1_ref.shape[0]
+    g = pl.program_id(0)
+
+    def _dma(mate, i):
+        r, s = i // S, i % S
+        starts = (sdma1_ref, sdma2_ref)[mate]
+        loc = (loc1, loc2)[mate]
+        st = starts[g * BLK + r, s]
+        return pltpu.make_async_copy(table_any.at[pl.ds(st, K)],
+                                     loc.at[r, pl.ds(s * K, K)],
+                                     sems.at[mate, r, s])
+
+    def issue(i, _):
+        _dma(0, i).start()
+        _dma(1, i).start()
+        return 0
+    jax.lax.fori_loop(0, BLK * S, issue, 0)
+
+    def drain(i, _):
+        _dma(0, i).wait()
+        _dma(1, i).wait()
+        return 0
+    jax.lax.fori_loop(0, BLK * S, drain, 0)
+
+    pos1, pos2, n, nh1, nh2 = merge_filter_block(
+        loc1[...], loc2[...], seed_offs=seed_offs, K=K, delta=delta, cap=cap)
+    pos1_ref[...] = pos1
+    pos2_ref[...] = pos2
+    n_ref[...] = n
+    nh1_ref[...] = nh1
+    nh2_ref[...] = nh2
+
+
+def pair_frontend_pallas(
+    table: jnp.ndarray,          # (T*K,) int32 flattened padded rows
+    sdma1: jnp.ndarray,          # (B, S) int32 row offsets (bucket * K)
+    sdma2: jnp.ndarray,
+    seed_offs: tuple,            # static per-seed read offsets
+    K: int,
+    delta: int,
+    max_candidates: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """B must be a multiple of `block` (ops.py pads and chunks launches to
+    <= LAUNCH_ROWS rows so the SMEM DMA tables stay bounded).
+
+    Returns (pos1, pos2) (B, C) and (n, n_hits1, n_hits2) (B,) int32.
+    """
+    B, S = sdma1.shape
+    assert B % block == 0, (B, block)
+    C = max_candidates
+    row_spec = lambda cols: pl.BlockSpec((block, cols), lambda i, *_: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B // block,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=[row_spec(C), row_spec(C),
+                   row_spec(1), row_spec(1), row_spec(1)],
+        scratch_shapes=[
+            pltpu.VMEM((block, S * K), jnp.int32),
+            pltpu.VMEM((block, S * K), jnp.int32),
+            pltpu.SemaphoreType.DMA((2, block, S)),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_frontend_kernel, S=S, K=K,
+                          seed_offs=tuple(seed_offs), delta=delta, cap=C),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, C), jnp.int32)] * 2
+        + [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 3,
+        interpret=interpret,
+    )(sdma1, sdma2, table)
+    pos1, pos2, n, nh1, nh2 = outs
+    return pos1, pos2, n[:, 0], nh1[:, 0], nh2[:, 0]
+
+
+# ------------------------------------------------- merge+filter only -----
+def _merge_filter_kernel(l1_ref, l2_ref, pos1_ref, pos2_ref,
+                         n_ref, nh1_ref, nh2_ref, *,
+                         seed_offs: tuple, K: int, delta: int, cap: int):
+    pos1, pos2, n, nh1, nh2 = merge_filter_block(
+        l1_ref[...], l2_ref[...], seed_offs=seed_offs, K=K, delta=delta,
+        cap=cap)
+    pos1_ref[...] = pos1
+    pos2_ref[...] = pos2
+    n_ref[...] = n
+    nh1_ref[...] = nh1
+    nh2_ref[...] = nh2
+
+
+def merge_filter_pallas(
+    locs1: jnp.ndarray,          # (B, S*K) int32 seed-major locations
+    locs2: jnp.ndarray,
+    seed_offs: tuple,
+    K: int,
+    delta: int,
+    max_candidates: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """Post-query entry: merge+filter for locations already gathered (the
+    sharded serve step).  B must be a multiple of `block` (ops.py pads)."""
+    B, M = locs1.shape
+    assert B % block == 0, (B, block)
+    assert M == len(seed_offs) * K, (M, len(seed_offs), K)
+    C = max_candidates
+    row_spec = lambda cols: pl.BlockSpec((block, cols), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_merge_filter_kernel, seed_offs=tuple(seed_offs),
+                          K=K, delta=delta, cap=C),
+        grid=(B // block,),
+        in_specs=[row_spec(M), row_spec(M)],
+        out_specs=[row_spec(C), row_spec(C),
+                   row_spec(1), row_spec(1), row_spec(1)],
+        out_shape=[jax.ShapeDtypeStruct((B, C), jnp.int32)] * 2
+        + [jax.ShapeDtypeStruct((B, 1), jnp.int32)] * 3,
+        interpret=interpret,
+    )(locs1, locs2)
+    pos1, pos2, n, nh1, nh2 = outs
+    return pos1, pos2, n[:, 0], nh1[:, 0], nh2[:, 0]

@@ -1,0 +1,143 @@
+"""Jit'd public wrappers for the fused pipeline front end.
+
+`pair_frontend` is the one-call steps-1-3 hot path: seed hashing +
+padded-row SeedMap lookup + sorted merge + Paired-Adjacency filter +
+front compaction, behind the standard ``backend`` switch resolved by
+`kernels/backend.py`.  The jnp backend is the bit-exact staged oracle
+(`ref.py`, which routes through `core.seeding` / `core.query` /
+`core.pair_filter`); the pallas/interpret backends run the two fused
+kernels, so the `(B, S, K)` location tensor and the `(B, S*K)` sorted
+start lists never reach HBM.
+
+`frontend_merge_filter` is the post-query half for callers whose SeedMap
+lookup is sharded (`core/genpairx_step.py`'s shard_map query): it takes
+the gathered `(B, S, K)` locations and fuses conversion + merge + filter
++ compaction in one kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.seeding import seed_offsets_tuple
+from repro.kernels._util import chunked_launch, pad_rows
+from repro.kernels.backend import resolve_backend
+from repro.kernels.pair_frontend.kernel import (
+    DEFAULT_BLOCK,
+    HASH_BLOCK,
+    LAUNCH_ROWS,
+    merge_filter_pallas,
+    pair_frontend_pallas,
+    seed_buckets_pallas,
+)
+from repro.kernels.pair_frontend.ref import (
+    FrontendResult,
+    merge_filter_ref,
+    pair_frontend_ref,
+)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("seed_len", "seeds_per_read", "hash_seed", "delta",
+                     "max_candidates", "block", "backend"),
+)
+def pair_frontend(
+    rows: jnp.ndarray,       # (T, K) int32 padded location rows
+    reads1: jnp.ndarray,     # (B, R) mate 1, reference orientation
+    reads2: jnp.ndarray,     # (B, R) mate 2, reference orientation
+    seed_len: int,
+    seeds_per_read: int = 3,
+    hash_seed: int = 0,
+    delta: int = 500,
+    max_candidates: int = 8,
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> FrontendResult:
+    """Fused front end for a batch of read pairs.
+
+    ``rows`` is the bucket-major padded Location Table (`to_padded(sm).rows`
+    or the in-jit CSR derivation in `core/pipeline.py`); its row width K
+    caps the locations per seed.  Both reads are expected in reference
+    orientation (mate 2 pre-revcomp'd, as everywhere in the pipeline).
+    """
+    backend = resolve_backend(backend, family="pair_frontend")
+    if backend == "jnp":
+        return pair_frontend_ref(rows, reads1, reads2, seed_len,
+                                 seeds_per_read, hash_seed, delta,
+                                 max_candidates)
+    interpret = backend == "interpret"
+    B, R = reads1.shape
+    T, K = rows.shape
+    offs = seed_offsets_tuple(R, seed_len, seeds_per_read)
+
+    # -- kernel 1: both mates' bucket ids in one launch -------------------
+    reads = jnp.concatenate([reads1, reads2], 0).astype(jnp.int32)
+    n = 2 * B
+    n_pad = n + ((-n) % HASH_BLOCK)
+    buckets = seed_buckets_pallas(
+        pad_rows(reads, n_pad), offs, seed_len, hash_seed, T,
+        interpret=interpret)[:n]
+
+    # -- kernel 2: row gather + merge + filter ----------------------------
+    # Scalar-prefetch tables hold flattened row offsets into the (T*K,)
+    # table; padding rows aim at bucket 0 (a safe in-bounds DMA) and are
+    # sliced off below.
+    sdma1 = buckets[:B] * K
+    sdma2 = buckets[B:] * K
+    table = rows.reshape(-1)
+    total, rows_per = chunked_launch(B, block, LAUNCH_ROWS)
+    sdma1 = pad_rows(sdma1, total)
+    sdma2 = pad_rows(sdma2, total)
+    parts = [
+        pair_frontend_pallas(
+            table, sdma1[s:s + rows_per], sdma2[s:s + rows_per], offs, K,
+            delta, max_candidates, block=block, interpret=interpret)
+        for s in range(0, total, rows_per)
+    ]
+    outs = [jnp.concatenate(cols) if len(parts) > 1 else cols[0]
+            for cols in zip(*parts)]
+    pos1, pos2, nc, nh1, nh2 = (o[:B] for o in outs)
+    return FrontendResult(pos1=pos1, pos2=pos2, n=nc,
+                          n_hits1=nh1, n_hits2=nh2)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("seed_offs", "delta", "max_candidates", "block",
+                     "backend"),
+)
+def frontend_merge_filter(
+    locs1: jnp.ndarray,      # (B, S, K) int32 per-seed locations
+    locs2: jnp.ndarray,
+    seed_offs: tuple,        # static per-seed read offsets (S ints)
+    delta: int,
+    max_candidates: int,
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> FrontendResult:
+    """Fused conversion + sorted merge + Δ filter + compaction (steps 2.5-3)
+    for locations already gathered by a (possibly sharded) SeedMap query."""
+    backend = resolve_backend(backend, family="pair_frontend")
+    offs_arr = jnp.asarray(seed_offs, jnp.int32)
+    if backend == "jnp":
+        return merge_filter_ref(locs1, locs2, offs_arr, delta,
+                                max_candidates)
+    interpret = backend == "interpret"
+    B, S, K = locs1.shape
+    total, rows_per = chunked_launch(B, block, LAUNCH_ROWS)
+    l1 = pad_rows(locs1.reshape(B, S * K), total)
+    l2 = pad_rows(locs2.reshape(B, S * K), total)
+    parts = [
+        merge_filter_pallas(
+            l1[s:s + rows_per], l2[s:s + rows_per], seed_offs, K, delta,
+            max_candidates, block=block, interpret=interpret)
+        for s in range(0, total, rows_per)
+    ]
+    outs = [jnp.concatenate(cols) if len(parts) > 1 else cols[0]
+            for cols in zip(*parts)]
+    pos1, pos2, nc, nh1, nh2 = (o[:B] for o in outs)
+    return FrontendResult(pos1=pos1, pos2=pos2, n=nc,
+                          n_hits1=nh1, n_hits2=nh2)

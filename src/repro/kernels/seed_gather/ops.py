@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_backend
 from repro.kernels.seed_gather.kernel import seed_gather_pallas
 from repro.kernels.seed_gather.ref import seed_gather_ref
 
@@ -15,8 +16,7 @@ def seed_gather(
     table: jnp.ndarray, ids: jnp.ndarray, backend: str = "auto"
 ) -> jnp.ndarray:
     """Row gather out[i] = table[ids[i]] with kernel/oracle backend switch."""
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    backend = resolve_backend(backend, family="seed_gather")
     if backend == "jnp":
         return seed_gather_ref(table, ids)
     shape = ids.shape

@@ -31,13 +31,18 @@ def _round(acc, lane):
     return _rotl(acc + lane * _u32(PRIME2), 13) * _u32(PRIME1)
 
 
-def _xxhash_kernel(words_ref, out_ref, *, seed: int):
-    w = words_ref[...]  # (BLK, 4) uint32
+def xxhash32_lanes(w0, w1, w2, w3, seed: int):
+    """Elementwise xxHash32 of a 16-byte message given as four uint32 lanes.
+
+    The kernel-body hashing unit, shared with the fused pair_frontend
+    kernel (which packs seeds and hashes them in-kernel).  All operands
+    broadcast; the result has the broadcast shape.
+    """
     s = _u32(seed)
-    v1 = _round(s + _u32(PRIME1) + _u32(PRIME2), w[:, 0])
-    v2 = _round(s + _u32(PRIME2), w[:, 1])
-    v3 = _round(s + _u32(0), w[:, 2])
-    v4 = _round(s - _u32(PRIME1), w[:, 3])
+    v1 = _round(s + _u32(PRIME1) + _u32(PRIME2), w0)
+    v2 = _round(s + _u32(PRIME2), w1)
+    v3 = _round(s + _u32(0), w2)
+    v4 = _round(s - _u32(PRIME1), w3)
     acc = _rotl(v1, 1) + _rotl(v2, 7) + _rotl(v3, 12) + _rotl(v4, 18)
     acc = acc + _u32(16)
     acc = acc ^ (acc >> _u32(15))
@@ -45,6 +50,12 @@ def _xxhash_kernel(words_ref, out_ref, *, seed: int):
     acc = acc ^ (acc >> _u32(13))
     acc = acc * _u32(PRIME3)
     acc = acc ^ (acc >> _u32(16))
+    return acc
+
+
+def _xxhash_kernel(words_ref, out_ref, *, seed: int):
+    w = words_ref[...]  # (BLK, 4) uint32
+    acc = xxhash32_lanes(w[:, 0], w[:, 1], w[:, 2], w[:, 3], seed)
     out_ref[...] = acc[:, None]
 
 

@@ -6,12 +6,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_backend
 from repro.kernels.xxhash.kernel import DEFAULT_BLOCK, xxhash32_pallas
 from repro.kernels.xxhash.ref import xxhash32_ref
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("seed", "block", "backend"))
@@ -24,10 +21,9 @@ def xxhash32(
     """xxHash32 of (…, 4) uint32 words.
 
     backend: "pallas" (TPU), "interpret" (kernel body on CPU), "jnp" (oracle),
-    "auto" (pallas on TPU else jnp).
+    "auto" (resolved by kernels/backend.py, incl. the REPRO_BACKEND env).
     """
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "jnp"
+    backend = resolve_backend(backend, family="xxhash")
     if backend == "jnp":
         return xxhash32_ref(words, seed)
     shape = words.shape[:-1]

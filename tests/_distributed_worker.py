@@ -7,7 +7,10 @@ subprocess (the main pytest process must keep seeing 1 device).  Asserts:
      returns exactly the single-device CSR query's results;
   2. the full genome-scale serve step (packed reference, sharded tables)
      maps simulated pairs to the same positions as the reference pipeline;
-  3. the data-parallel map_pairs wrapper equals single-device map_pairs.
+  3. the data-parallel map_pairs wrapper equals single-device map_pairs;
+  4. the G2 prescreen (prescreen_top=2) preserves the mapping;
+  5. the sharded fused front end (make_distributed_frontend) equals the
+     staged single-device front end.
 
 Exit code 0 = all checks passed.
 """
@@ -24,8 +27,10 @@ from repro.core import (  # noqa: E402
     random_reference, simulate_pairs,
 )
 from repro.core.distributed import (  # noqa: E402
-    make_distributed_map_pairs, make_sharded_query, shard_seedmap,
+    make_distributed_frontend, make_distributed_map_pairs,
+    make_sharded_query, shard_seedmap,
 )
+from repro.core.pair_filter import paired_adjacency_filter  # noqa: E402
 from repro.core.encoding import pack_2bit  # noqa: E402
 from repro.core.genpairx_step import make_genpair_serve_step  # noqa: E402
 from repro.core.pipeline import PipelineConfig  # noqa: E402
@@ -88,6 +93,22 @@ def main():
     light_s = (np.asarray(res_s.method) == 1).mean()
     assert light_p >= light_s - 0.05, (light_p, light_s)
     print(f"ok: prescreen_top=2 preserves mapping ({same_pos:.1%} same)")
+
+    # ---- 5. sharded fused front end == staged single-device front end ---
+    reads2_fwd = (3 - reads2)[:, ::-1]
+    seeds2 = seed_read_batch(reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
+                             sm.config.hash_seed)
+    q1 = query_read_batch(sm, seeds, cfg.max_locs_per_seed)
+    q2 = query_read_batch(sm, seeds2, cfg.max_locs_per_seed)
+    cands = paired_adjacency_filter(q1, q2, cfg.delta, cfg.max_candidates)
+    fe_fn = make_distributed_frontend(mesh, cfg)
+    fe = fe_fn(ssm, reads1, reads2_fwd)
+    np.testing.assert_array_equal(np.asarray(fe.pos1), np.asarray(cands.pos1))
+    np.testing.assert_array_equal(np.asarray(fe.pos2), np.asarray(cands.pos2))
+    np.testing.assert_array_equal(np.asarray(fe.n), np.asarray(cands.n))
+    np.testing.assert_array_equal(np.asarray(fe.n_hits1),
+                                  np.asarray(q1.n_hits))
+    print("ok: distributed fused front end == staged front end")
 
 
 if __name__ == "__main__":

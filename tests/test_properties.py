@@ -9,8 +9,12 @@
   P4  merge_read_starts output is sorted with INVALID_LOC padding last.
   P5  Checkpoint save/restore is an identity for arbitrary pytrees.
   P6  paired_adjacency_filter equals a naive O(M^2) python oracle: Δ
-      window, min-partner choice, dedup-first-occurrence, cap-C
-      compaction and INVALID_LOC padding all reproduced exactly.
+      window, per-occurrence partner probing, (start1, start2) pair
+      dedup, cap-C compaction and INVALID_LOC padding all reproduced
+      exactly.
+  P7  the fused front end's merge+filter (kernels/pair_frontend, both
+      backends) equals `merge_read_starts` + the same naive oracle end
+      to end from raw per-seed locations.
 """
 import jax
 import jax.numpy as jnp
@@ -130,24 +134,30 @@ def test_p4_merge_sorted_invalid_last(seed):
 def _naive_adjacency(s1, s2, delta, cap):
     """O(M^2) python oracle for one `_row_filter` row.
 
-    Semantics mirrored exactly: a sorted read-1 start is kept iff it is
-    valid, the first occurrence of its value (dedup), and some valid
-    read-2 start lies within Δ; its partner is the smallest such start
-    (what `searchsorted(..., side="left")` lands on).  Kept pairs are
+    Semantics mirrored exactly: each *run* of m equal valid read-1 starts
+    probes the first m valid read-2 starts >= v - Δ (occurrence k probes
+    the (k+1)-th, so several mate-2 placements near the same mate-1 start
+    each surface); a probe is kept iff its partner lies within Δ, and
+    duplicate (start1, start2) pairs collapse to one.  Kept pairs are
     compacted to the front of a cap-sized INVALID_LOC-padded buffer and
     the reported count is the uncapped total, clamped to cap.
     """
     kept = []
     s1l, s2l = s1.tolist(), s2.tolist()
+    ge = lambda v: [w for w in s2l
+                    if w != int(INVALID_LOC) and w >= v - delta]
     for i, v in enumerate(s1l):
         if v == int(INVALID_LOC):
             continue
         if i > 0 and v == s1l[i - 1]:
-            continue  # dedup: first occurrence only
-        partners = [w for w in s2l
-                    if w != int(INVALID_LOC) and abs(w - v) <= delta]
-        if partners:
-            kept.append((v, min(partners)))
+            continue  # handle the whole run of duplicates at once
+        m = s1l.count(v)
+        partners = [w for w in ge(v)[:m] if abs(w - v) <= delta]
+        seen = set()
+        for w in partners:
+            if w not in seen:
+                seen.add(w)
+                kept.append((v, w))
     p1 = np.full(cap, INVALID_LOC, np.int32)
     p2 = np.full(cap, INVALID_LOC, np.int32)
     for j, (a, b) in enumerate(kept[:cap]):
@@ -178,6 +188,47 @@ def test_p6_adjacency_matches_naive_oracle(seed, n1, n2, delta, cap):
     np.testing.assert_array_equal(np.asarray(cands.pos1[0]), p1)
     np.testing.assert_array_equal(np.asarray(cands.pos2[0]), p2)
     assert int(cands.n[0]) == n
+
+
+@given(st.integers(0, 2**31), st.sampled_from([0, 5, 25, 60]),
+       st.sampled_from([1, 2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_p7_frontend_merge_filter_matches_naive(seed, delta, cap):
+    """Raw (S, K) locations -> starts -> sort -> naive adjacency oracle,
+    against frontend_merge_filter on the jnp AND interpret backends."""
+    from repro.kernels.pair_frontend import frontend_merge_filter
+
+    rng = np.random.default_rng(seed)
+    S, K = 2, 4
+    offs = (0, 7)
+
+    def make_locs():
+        # small value range: duplicate read-starts across seeds are common
+        locs = rng.integers(0, 100, (S, K)).astype(np.int32)
+        locs[rng.random((S, K)) < 0.35] = INVALID_LOC
+        return locs
+
+    def starts_of(locs):
+        vals = sorted(int(locs[s, k]) - offs[s]
+                      for s in range(S) for k in range(K)
+                      if locs[s, k] != int(INVALID_LOC))
+        arr = np.full(S * K, INVALID_LOC, np.int32)
+        arr[:len(vals)] = np.asarray(vals, np.int32)
+        return arr, len(vals)
+
+    l1, l2 = make_locs(), make_locs()
+    s1, n1 = starts_of(l1)
+    s2, n2 = starts_of(l2)
+    p1, p2, n = _naive_adjacency(s1, s2, delta, cap)
+    for backend in ("jnp", "interpret"):
+        fe = frontend_merge_filter(jnp.asarray(l1[None]),
+                                   jnp.asarray(l2[None]), offs, delta, cap,
+                                   block=1, backend=backend)
+        np.testing.assert_array_equal(np.asarray(fe.pos1[0]), p1, backend)
+        np.testing.assert_array_equal(np.asarray(fe.pos2[0]), p2, backend)
+        assert int(fe.n[0]) == n
+        assert int(fe.n_hits1[0]) == n1
+        assert int(fe.n_hits2[0]) == n2
 
 
 @given(st.integers(0, 2**31), st.integers(1, 4))
