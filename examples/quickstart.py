@@ -1,17 +1,20 @@
-"""Quickstart: index a reference, map paired-end reads, read the results.
+"""Quickstart: build a Mapper session, map paired-end reads, read results.
 
-Runs in a few seconds on CPU:
+The engine front door: `Mapper.build` indexes the reference and resolves
+the execution plan once (kernel backends, reference flavor, SeedMap
+layout); `mapper.map` then maps batch after batch with zero per-call
+setup.  Runs in a few seconds on CPU:
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap, map_pairs,
+    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
     random_reference, seedmap_stats, simulate_pairs, stage_stats,
 )
 from repro.core.pipeline import M_DP, M_LIGHT
 from repro.core.seedmap import INVALID_LOC
+from repro.engine import Mapper
 
 CIGAR_OPS = {0: "M", 1: "I", 2: "D", 3: "X"}
 
@@ -28,19 +31,22 @@ def cigar_str(runs: np.ndarray) -> str:
 def main():
     rng = np.random.default_rng(0)
 
-    # ---- offline stage: reference + SeedMap index (paper §4.2) ----------
-    print("== offline: building the SeedMap index ==")
+    # ---- offline stage: index + engine session (paper §4.2) -------------
+    print("== offline: building the SeedMap index + Mapper session ==")
     ref = random_reference(200_000, rng)
+    cfg = PipelineConfig()
     sm = build_seedmap(ref, SeedMapConfig(table_bits=18))
+    mapper = Mapper.from_index(sm, ref, cfg)
     for k, v in seedmap_stats(sm).items():
         print(f"  {k}: {v}")
+    print(f"  resolved backends: frontend={mapper.pipe_cfg.frontend_backend}"
+          f" light={mapper.pipe_cfg.light_backend}"
+          f" packed_ref={mapper.pipe_cfg.packed_ref}")
 
     # ---- online stage: map a batch of FR read pairs (paper §4.3-4.6) ----
     print("\n== online: mapping 256 simulated read pairs ==")
     sim = simulate_pairs(ref, 256, ReadSimConfig(sub_rate=0.002), seed=1)
-    cfg = PipelineConfig()
-    res = map_pairs(sm, jnp.asarray(ref), jnp.asarray(sim.reads1),
-                    jnp.asarray(sim.reads2), cfg)
+    res = mapper.map(sim.reads1, sim.reads2)
 
     method = np.asarray(res.method)
     pos1 = np.asarray(res.pos1)

@@ -1,0 +1,33 @@
+"""CI engine smoke: quickstart + a short map_stream serve, shim-clean.
+
+Runs the two engine front-door entry points end to end (under whatever
+``REPRO_BACKEND`` the job sets — CI uses the interpret-mode kernels) and
+asserts that no pre-engine deprecation shim (`map_pairs`, the
+`distributed.make_*` factories) was hit anywhere on the way: the engine
+paths must resolve everything through `repro.engine` itself.
+
+  PYTHONPATH=src REPRO_BACKEND=interpret python scripts/engine_smoke.py
+"""
+import runpy
+import sys
+import warnings
+
+ARGS = ["serve", "--ref-len", "120000", "--batch", "64",
+        "--batches", "3", "--table-bits", "18"]
+
+
+def main():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        runpy.run_path("examples/quickstart.py", run_name="__main__")
+        sys.argv = ARGS
+        runpy.run_module("repro.launch.serve", run_name="__main__")
+    shim = [w for w in caught
+            if issubclass(w.category, DeprecationWarning)
+            and "Mapper" in str(w.message)]
+    assert not shim, [str(w.message) for w in shim]
+    print("engine smoke: no deprecation-shim warnings")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,16 @@
 
 Keep each shim tiny and in one place so call sites stay clean.  Mesh
 axis-type compatibility lives in `repro.launch.mesh.auto_axis_kwargs`.
+
+Also home to :func:`warn_deprecated`, the warn-once plumbing shared by
+the pre-engine entry points (`map_pairs`, the `distributed.make_*`
+factories) that now delegate to `repro.engine` — it lives here rather
+than in the engine package so `repro.core` modules can import it without
+a core <-> engine cycle.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 
@@ -11,3 +19,24 @@ if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:  # older jax: pre-promotion location
     from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+_warned: set[str] = set()
+
+
+def warn_deprecated(name: str, message: str, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning`` for ``name`` once per process.
+
+    The shimmed entry points stay fully functional (tests pin the engine
+    against them bit-for-bit), so one nudge per process is enough; a
+    warning per call would drown the suites that use them as oracles.
+    """
+    if name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_deprecation_warnings() -> None:
+    """Re-arm the warn-once latches (test isolation helper)."""
+    _warned.clear()

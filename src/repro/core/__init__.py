@@ -6,7 +6,14 @@ from repro.core.encoding import encode_str, pack_2bit, revcomp, unpack_2bit
 from repro.core.hashing import xxhash32_words
 from repro.core.light_align import LightAlignResult, light_align
 from repro.core.pair_filter import CandidateSet, paired_adjacency_filter
-from repro.core.pipeline import MapResult, PipelineConfig, map_pairs, stage_stats
+from repro.core.pipeline import (
+    MapResult,
+    PipelineConfig,
+    map_pairs,
+    map_pairs_impl,
+    stage_stat_counts,
+    stage_stats,
+)
 from repro.core.query import QueryResult, query_csr, query_read_batch
 from repro.core.scoring import Scoring
 from repro.core.seeding import SeedSet, hash_seeds, seed_read_batch
@@ -25,7 +32,8 @@ __all__ = [
     "encode_str", "pack_2bit", "revcomp", "unpack_2bit", "xxhash32_words",
     "LightAlignResult", "light_align", "CandidateSet",
     "paired_adjacency_filter", "MapResult", "PipelineConfig", "map_pairs",
-    "stage_stats", "QueryResult", "query_csr", "query_read_batch", "Scoring",
+    "map_pairs_impl", "stage_stat_counts", "stage_stats",
+    "QueryResult", "query_csr", "query_read_batch", "Scoring",
     "SeedSet", "hash_seeds", "seed_read_batch", "INVALID_LOC", "PaddedSeedMap",
     "SeedMap", "SeedMapConfig", "build_seedmap", "seedmap_stats", "to_padded",
     "ReadSimConfig", "random_reference", "simulate_pairs",

@@ -20,10 +20,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.compat import shard_map
-from repro.core.pipeline import PipelineConfig, map_pairs
+from repro.compat import shard_map, warn_deprecated
+from repro.core.pipeline import PipelineConfig
 from repro.core.query import QueryResult, merge_read_starts
 from repro.core.seedmap import INVALID_LOC, SeedMap, SeedMapConfig
 
@@ -126,13 +126,18 @@ def make_sharded_locs(mesh: Mesh, model_axis: str = "model",
 
 def make_sharded_query(mesh: Mesh, model_axis: str = "model",
                        batch_axes=("data",)):
-    """Build a shard_map'd SeedMap query over `mesh`.
+    """Deprecated: a `repro.engine.Mapper` with ``shard_index=True`` owns
+    the sharded lookup now (this factory's math lives on in its plan).
 
     Returns query_fn(ssm: ShardedSeedMap, hashes (B, S) u32, seed_offsets,
     K) -> QueryResult with starts (B, S*K).  Tables are sharded along
     `model_axis`; the batch along `batch_axes`; results end up sharded along
     the batch axes and replicated along model.
     """
+    warn_deprecated(
+        "make_sharded_query",
+        "make_sharded_query is deprecated; build a repro.engine.Mapper "
+        "with ExecutionConfig(mesh=..., shard_index=True) instead")
     locs_fn = make_sharded_locs(mesh, model_axis, batch_axes)
 
     def query_fn(ssm: ShardedSeedMap, hashes: jnp.ndarray,
@@ -145,7 +150,10 @@ def make_sharded_query(mesh: Mesh, model_axis: str = "model",
 def make_distributed_frontend(mesh: Mesh, cfg: PipelineConfig,
                               model_axis: str = "model",
                               batch_axes=("data",)):
-    """Sharded pipeline front end: bucket-sharded SeedMap lookup + the
+    """Deprecated: the engine's sharded-index plan runs this front end as
+    part of its pre-jitted serve step (`repro.engine.plan`).
+
+    Sharded pipeline front end: bucket-sharded SeedMap lookup + the
     fused merge/filter half of `kernels/pair_frontend`.
 
     Returns frontend_fn(ssm, reads1, reads2_fwd) -> FrontendResult (both
@@ -158,6 +166,11 @@ def make_distributed_frontend(mesh: Mesh, cfg: PipelineConfig,
     from repro.core.seeding import seed_offsets_tuple, seed_read_batch
     from repro.kernels.pair_frontend.ops import frontend_merge_filter
 
+    warn_deprecated(
+        "make_distributed_frontend",
+        "make_distributed_frontend is deprecated; build a "
+        "repro.engine.Mapper with ExecutionConfig(mesh=..., "
+        "shard_index=True) — its serve step fuses this front end")
     locs_fn = make_sharded_locs(mesh, model_axis, batch_axes)
 
     def frontend_fn(ssm: ShardedSeedMap, reads1: jnp.ndarray,
@@ -181,29 +194,25 @@ def make_distributed_frontend(mesh: Mesh, cfg: PipelineConfig,
 
 def make_distributed_map_pairs(mesh: Mesh, cfg: PipelineConfig,
                                batch_axes=("data",)):
-    """Data-parallel GenPair pipeline: batch over `batch_axes`, reference and
-    SeedMap replicated (the index-sharded query path is exercised separately
-    by make_sharded_query; fusing both is the hillclimb subject in
-    EXPERIMENTS.md §Perf).
+    """Deprecated: warn once and delegate to the engine's data-parallel
+    plan (`repro.engine.plan.pipeline_step` — replicated index/reference,
+    batch sharded over `batch_axes`, the placement this factory owned).
+    Build a `repro.engine.Mapper` with ``ExecutionConfig(mesh=...)``
+    instead: it also resolves backends/`packed_ref` once and keeps the
+    pre-packed reference resident instead of re-packing per call."""
+    warn_deprecated(
+        "make_distributed_map_pairs",
+        "make_distributed_map_pairs is deprecated; build a "
+        "repro.engine.Mapper with ExecutionConfig(mesh=...) instead")
+    # Imported lazily: repro.engine imports this module's building blocks.
+    from repro.engine.config import resolved_pipeline
+    from repro.engine.plan import pipeline_step
 
-    `cfg.packed_ref=True` flows through map_pairs: both the candidate-align
-    kernel and the DP fallback gather from the 2-bit packed replica (4x
-    smaller window DMAs on every device).  Pass the pre-packed uint32
-    words (`pack_2bit(ref)`) as the `ref` argument — map_pairs accepts
-    either flavor, but handing it uint8 makes every jitted step re-read
-    and re-pack the whole reference, which at genome scale costs more than
-    the window saving, and replicates the 4x-larger uint8 array."""
+    step = pipeline_step(resolved_pipeline(cfg), mesh=mesh,
+                         batch_axes=batch_axes)
 
-    batch_spec = NamedSharding(mesh, P(batch_axes))
-    repl = NamedSharding(mesh, P())
+    def legacy_step(sm, ref, reads1, reads2):
+        return step(sm, ref, reads1, reads2,
+                    jnp.int32(reads1.shape[0]))
 
-    @functools.partial(
-        jax.jit,
-        static_argnames=("pipe_cfg",),
-        in_shardings=(repl, repl, batch_spec, batch_spec),
-        out_shardings=batch_spec,
-    )
-    def step(sm, ref, reads1, reads2, pipe_cfg=cfg):
-        return map_pairs(sm, ref, reads1, reads2, pipe_cfg)
-
-    return step
+    return legacy_step

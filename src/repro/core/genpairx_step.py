@@ -1,7 +1,13 @@
-"""GenPairX production serve step: the paper's workload on the TPU mesh.
+"""GenPairX sharded-index serve step: the paper's workload on the TPU mesh.
 
-This is the dry-run / deployment entry for the genomics pipeline itself
-(`--arch genpair`): SeedMap sharded by bucket range across the `model` axis
+This module is the *mesh math* of the pipeline.  The front door for
+running (or lowering) it is the engine API: a `repro.engine.Mapper` built
+with ``ExecutionConfig(mesh=..., shard_index=True)`` shards the SeedMap
+and places the packed reference once at build time and dispatches to a
+pre-jitted wrapper of `make_genpair_serve_step`; `repro.engine.plan.
+mesh_serve_jit` is the lowering entry the multi-pod dry-run uses.
+
+The step itself (`--arch genpair`): SeedMap sharded by bucket range across the `model` axis
 (the NMSL channel-striping analogue), read batch sharded across
 (`pod`,)`data`, reference 2-bit packed and replicated, Light Alignment and
 DP fallback fully data-parallel.  The post-query front end (start
@@ -197,6 +203,7 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
                              jnp.where(dp_done, dp_sc2, neg)),
             method=method, cigar1=cig1, cigar2=cig2,
             had_hits=had_hits, passed_adjacency=passed, light_ok=light_ok,
+            n_valid=jnp.ones((B,), bool),
         )
 
     return serve_step

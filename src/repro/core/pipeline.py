@@ -1,5 +1,16 @@
 """GenPair online pipeline (§4.1, Fig. 3): the paper's four steps end to end.
 
+This module is the *math* of the pipeline — one jit-able function over
+fixed-shape batches (`map_pairs_impl`).  The front door for running it is
+the session-style engine API in `repro/engine`: ``Mapper.build(...)``
+resolves the reference flavor (2-bit packed or not), the SeedMap layout
+(CSR vs `PaddedSeedMap`) and the kernel backends exactly once, then
+``mapper.map`` / ``mapper.map_stream`` dispatch to a pre-jitted step built
+from this module — the same code on one device and on a mesh (see
+docs/ENGINE.md).  The legacy one-shot entry `map_pairs` survives as a thin
+deprecation shim: it warns once and delegates to the same implementation,
+re-resolving everything per call.
+
 Each pipeline step maps onto a kernel family (all behind the shared
 backend layer, `repro/kernels/backend.py`):
 
@@ -43,6 +54,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import warn_deprecated
 from repro.core.encoding import gather_windows_packed, pack_2bit
 from repro.core.light_align import gather_ref_windows
 from repro.core.dp_fallback import gotoh_semiglobal
@@ -120,21 +132,45 @@ class MapResult(NamedTuple):
     had_hits: jnp.ndarray        # (B,) bool both reads had SeedMap hits
     passed_adjacency: jnp.ndarray  # (B,) bool >=1 candidate survived Δ filter
     light_ok: jnp.ndarray          # (B,) bool light alignment accepted
+    # (B,) bool: row is a real pair (False for the rows `map_stream` pads a
+    # ragged tail batch with).  Full-batch paths emit all-True.
+    n_valid: jnp.ndarray
+
+
+def stage_stat_counts(res: MapResult) -> dict:
+    """Fig. 10 quantities as device int32 *counts* over the valid rows.
+
+    The device-resident form of :func:`stage_stats`: everything stays a
+    jnp scalar, so a serve loop can accumulate batch after batch with one
+    tiny on-device add and fetch the totals once at the end — the
+    per-batch ``float(v)`` host syncs of the pre-engine loop disappear.
+    Padded rows (``n_valid`` False) count toward nothing, including
+    ``n_pairs``.
+    """
+    v = res.n_valid
+    c = lambda x: jnp.sum((x & v).astype(jnp.int32))
+    return {
+        "no_seed_hit": c(~res.had_hits),
+        "adjacency_fail": c(res.had_hits & ~res.passed_adjacency),
+        "light_align_fail": c(res.passed_adjacency & ~res.light_ok),
+        "light_mapped": c(res.method == M_LIGHT),
+        "dp_mapped": c(res.method == M_DP),
+        "dp_overflow": c(res.method == M_DP_OVERFLOW),
+        "residual_full_dp": c(res.method == M_RESIDUAL_FULL),
+        "n_pairs": jnp.sum(v.astype(jnp.int32)),
+    }
 
 
 def stage_stats(res: MapResult) -> dict:
-    """Fig. 10 quantities as fractions of the batch."""
-    B = res.method.shape[0]
-    f = lambda x: jnp.sum(x) / B
-    return {
-        "no_seed_hit": f(~res.had_hits),
-        "adjacency_fail": f(res.had_hits & ~res.passed_adjacency),
-        "light_align_fail": f(res.passed_adjacency & ~res.light_ok),
-        "light_mapped": f(res.method == M_LIGHT),
-        "dp_mapped": f(res.method == M_DP),
-        "dp_overflow": f(res.method == M_DP_OVERFLOW),
-        "residual_full_dp": f(res.method == M_RESIDUAL_FULL),
-    }
+    """Fig. 10 quantities as fractions of the (valid rows of the) batch.
+
+    Convenience view over :func:`stage_stat_counts`; converting the values
+    with ``float()`` forces a host sync each — accumulate the counts on
+    device instead when looping over batches.
+    """
+    counts = stage_stat_counts(res)
+    n = jnp.maximum(counts.pop("n_pairs"), 1)
+    return {k: v / n for k, v in counts.items()}
 
 
 def _best_candidate_light(
@@ -170,8 +206,7 @@ class _Seeded(NamedTuple):
     q2_starts: jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def map_pairs(
+def map_pairs_impl(
     sm: SeedMap | PaddedSeedMap,
     ref: jnp.ndarray,
     reads1: jnp.ndarray,
@@ -179,6 +214,10 @@ def map_pairs(
     cfg: PipelineConfig = PipelineConfig(),
 ) -> MapResult:
     """Map a batch of FR read pairs. reads2 is as-sequenced (reverse strand).
+
+    This is the traceable pipeline body — no jit, no warning — that both
+    the engine's pre-built steps (`repro.engine.plan`) and the legacy
+    `map_pairs` shim close over.
 
     ``ref`` is the (L,) uint8 base array; with ``cfg.packed_ref=True`` it
     may instead be the (Lw,) uint32 2-bit packing (`pack_2bit`), which
@@ -290,5 +329,31 @@ def map_pairs(
     return MapResult(
         pos1=pos1, pos2=pos2, score1=score1, score2=score2, method=method,
         cigar1=cig1, cigar2=cig2, had_hits=had_hits, passed_adjacency=passed,
-        light_ok=light_ok,
+        light_ok=light_ok, n_valid=jnp.ones((B,), bool),
     )
+
+
+_jitted_map_pairs = jax.jit(map_pairs_impl, static_argnames=("cfg",))
+
+
+def map_pairs(
+    sm: SeedMap | PaddedSeedMap,
+    ref: jnp.ndarray,
+    reads1: jnp.ndarray,
+    reads2: jnp.ndarray,
+    cfg: PipelineConfig = PipelineConfig(),
+) -> MapResult:
+    """Deprecated one-shot entry point: build a `repro.engine.Mapper` instead.
+
+    Every call re-resolves what a `Mapper` resolves once at build time
+    (kernel backends, the `packed_ref` tri-state, and — on the kernel
+    front-end backends — the CSR->padded SeedMap relayout, in-jit).  Kept
+    as a thin shim because it is the reference the engine is pinned
+    against bit-for-bit; warns once per process and delegates.
+    """
+    warn_deprecated(
+        "map_pairs",
+        "map_pairs re-resolves backends/layouts per call; build a session "
+        "once with repro.engine.Mapper.from_index(...) and use mapper.map / "
+        "mapper.map_stream instead")
+    return _jitted_map_pairs(sm, ref, reads1, reads2, cfg)

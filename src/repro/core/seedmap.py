@@ -131,9 +131,18 @@ def build_seedmap(ref: np.ndarray, config: SeedMapConfig = SeedMapConfig()) -> S
     )
 
 
-def to_padded(sm: SeedMap) -> PaddedSeedMap:
-    """CSR -> bucket-major fixed-width rows (truncating at padded_cap)."""
+def to_padded(sm: SeedMap, cap: int | None = None) -> PaddedSeedMap:
+    """CSR -> bucket-major fixed-width rows (truncating at ``cap``).
+
+    ``cap`` defaults to ``config.padded_cap``; the engine passes the
+    pipeline's ``max_locs_per_seed`` so the padded row width matches the
+    per-seed location cap the CSR query would have applied (the rows are
+    then bit-identical to `query.padded_rows_device` at the same cap —
+    pinned by the round-trip property test).
+    """
     cfg = sm.config
+    if cap is not None and cap != cfg.padded_cap:
+        cfg = dataclasses.replace(cfg, padded_cap=cap)
     offsets = np.asarray(sm.offsets)
     locations = np.asarray(sm.locations)
     T, cap = cfg.table_size, cfg.padded_cap

@@ -1,0 +1,23 @@
+"""One Mapper engine API: sessionized index + execution plan (docs/ENGINE.md).
+
+The paper's pipeline (§4.1, Fig. 3) is one dataflow; this package is its
+one front door.  ``Mapper.build`` / ``Mapper.from_index`` construct the
+canonical device-resident state exactly once — 2-bit packed reference,
+`PaddedSeedMap` layout, resolved kernel backends, mesh/sharding placement
+— in the spirit of the persistent-service mappers GenPairX is benchmarked
+against (BWA-MEM2's reusable index handle; GenDP's fixed dataflow
+programmed once, driven many times).  ``mapper.map`` dispatches to a
+single pre-jitted step that is the same code for single-device and mesh
+execution; ``mapper.map_stream`` runs the async double-buffered host loop
+that keeps the fused kernels fed.
+
+The pre-engine entry points — `core.pipeline.map_pairs` and the
+`core.distributed.make_*` factories — survive as thin deprecation shims
+over the same implementations (warn once, delegate).
+"""
+from repro.core.pipeline import MapResult
+from repro.engine.config import ExecutionConfig
+from repro.engine.mapper import Mapper
+from repro.engine.stream import StreamResult
+
+__all__ = ["ExecutionConfig", "MapResult", "Mapper", "StreamResult"]

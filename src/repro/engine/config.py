@@ -1,0 +1,89 @@
+"""ExecutionConfig + the once-per-session resolution of scattered knobs.
+
+Before the engine, four entry points (`map_pairs`, the genome-scale serve
+step, the `distributed.make_*` factories, the hand-rolled `launch/serve`
+loop) each re-resolved kernel backends, the `packed_ref` tri-state and
+the SeedMap layout independently.  `resolved_pipeline` is that resolution
+done exactly once, at `Mapper` build time: the `PipelineConfig` it
+returns has concrete backend names and a concrete ``packed_ref`` bool, so
+nothing on the per-batch path consults the environment or an entry-point
+default again.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from jax.sharding import Mesh
+
+from repro.core.pipeline import PipelineConfig
+from repro.kernels.backend import resolve_backend
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """How a `Mapper` session executes its pre-built step.
+
+    mesh:         run on this jax Mesh (None: single-device jit).
+    batch_axes:   mesh axes the read batch shards over.
+    model_axis:   mesh axis the SeedMap shards over (``shard_index``).
+    shard_index:  bucket-shard the SeedMap along ``model_axis`` (the NMSL
+                  channel-striping serve plan, today's genome-scale
+                  `make_genpair_serve_step`); False replicates the index
+                  and runs data-parallel (today's
+                  `make_distributed_map_pairs`).  Requires ``mesh``.
+    stream_batch: fixed batch shape for `map_stream` (None: the first
+                  batch's row count).  Ragged tail batches are padded up
+                  to it and masked via `MapResult.n_valid`.
+    donate_reads: donate the H2D read buffers of each `map_stream` step
+                  to XLA (they are never reused host-side).
+    backend:      unified kernel-backend override for *all* families,
+                  resolved once at build (None: resolve the pipe config's
+                  per-family settings, honoring ``REPRO_BACKEND``).
+    packed_ref:   overrides the `PipelineConfig.packed_ref` tri-state at
+                  build (None: resolve the tri-state against the plan's
+                  default — packed for the sharded-index serve plan,
+                  unpacked otherwise, the historical entry-point split).
+    """
+
+    mesh: Mesh | None = None
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    shard_index: bool = False
+    stream_batch: int | None = None
+    donate_reads: bool = True
+    backend: str | None = None
+    packed_ref: bool | None = None
+
+    def __post_init__(self):
+        if self.shard_index and self.mesh is None:
+            raise ValueError("shard_index=True requires a mesh")
+
+
+def resolved_pipeline(
+    pipe_cfg: PipelineConfig,
+    exec_cfg: ExecutionConfig | None = None,
+    *,
+    packed_default: bool | None = None,
+) -> PipelineConfig:
+    """Resolve every deferred `PipelineConfig` knob to a concrete value.
+
+    Returns a config whose ``light_backend`` / ``frontend_backend`` are
+    concrete backend names (env override and auto rule applied now, not
+    per trace) and whose ``packed_ref`` is a concrete bool.
+    ``packed_default`` overrides the plan-derived tri-state default (the
+    dry-run resolves serve-flavored configs without an ExecutionConfig).
+    """
+    exec_cfg = exec_cfg or ExecutionConfig()
+    light = exec_cfg.backend or pipe_cfg.light_backend
+    frontend = exec_cfg.backend or pipe_cfg.frontend_backend
+    packed = exec_cfg.packed_ref
+    if packed is None:
+        if packed_default is None:
+            packed_default = exec_cfg.shard_index
+        packed = pipe_cfg.packed(default=packed_default)
+    return dataclasses.replace(
+        pipe_cfg,
+        light_backend=resolve_backend(light, family="candidate_align"),
+        frontend_backend=resolve_backend(frontend, family="pair_frontend"),
+        packed_ref=bool(packed),
+    )

@@ -1,0 +1,262 @@
+"""The `Mapper` session: canonical device-resident state, built once.
+
+``Mapper.build`` (reference -> index -> session) and ``Mapper.from_index``
+(existing CSR `SeedMap` -> session) do, exactly once, everything the
+pre-engine entry points re-did per call:
+
+  * resolve kernel backends for every family (env override, auto rule);
+  * resolve the ``packed_ref`` tri-state and 2-bit pack the reference;
+  * pick the SeedMap layout the step consumes — the CSR map on the staged
+    jnp oracle path, the bucket-major `PaddedSeedMap` relayout (row width
+    = the pipeline's per-seed location cap) on the kernel backends, the
+    bucket-range `ShardedSeedMap` on the sharded-index mesh plan;
+  * place everything on devices (replicated or sharded per the
+    `ExecutionConfig`) and jit the one step the session dispatches to.
+
+``mapper.map`` is the synchronous one-batch call; ``mapper.map_stream``
+is the async double-buffered host loop (`engine.stream`) — one fused
+jitted dispatch per batch carrying the device-side stage totals and an
+optional caller reduction.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.encoding import pack_2bit
+from repro.core.pipeline import (
+    MapResult,
+    PipelineConfig,
+    stage_stat_counts,
+)
+from repro.core.seedmap import (
+    PaddedSeedMap,
+    SeedMap,
+    SeedMapConfig,
+    build_seedmap,
+    to_padded,
+)
+from repro.engine.config import ExecutionConfig, resolved_pipeline
+from repro.engine import plan
+from repro.engine.stats import STAT_KEYS, fetch_stage_totals, init_stage_totals
+from repro.engine.stream import (
+    StreamResult,
+    pad_tail,
+    run_stream,
+    split_batch,
+)
+
+_DONATE_MSG = ".*donated.*"   # XLA's unusable-donation note, expected on CPU
+
+
+class Mapper:
+    """A reusable paired-end mapping session (index + execution plan).
+
+    Use :meth:`build` / :meth:`from_index`; the constructor wires an
+    already-resolved session together.
+    """
+
+    def __init__(self, *, state: tuple, state_shardings: tuple | None,
+                 raw_step, pipe_cfg: PipelineConfig,
+                 exec_cfg: ExecutionConfig, sm_config: SeedMapConfig,
+                 index):
+        self._state = state          # device arrays prepended to each call
+        self._state_shardings = state_shardings
+        self._raw_step = raw_step    # traceable; fused into the stream step
+        self.pipe_cfg = pipe_cfg     # fully resolved (concrete backends)
+        self.exec_cfg = exec_cfg
+        self.sm_config = sm_config
+        self.index = index           # the session's resolved index object
+        self._step = plan.jit_step(
+            raw_step, len(state), mesh=exec_cfg.mesh,
+            state_shardings=state_shardings,
+            batch_axes=exec_cfg.batch_axes)
+        self._fused_cache: dict = {}
+
+    # ------------------------------------------------------------ build --
+    @classmethod
+    def build(cls, ref, seedmap_cfg: SeedMapConfig | None = None,
+              pipe_cfg: PipelineConfig | None = None,
+              exec_cfg: ExecutionConfig | None = None) -> "Mapper":
+        """Offline stage + session build: index ``ref`` and resolve."""
+        seedmap_cfg = seedmap_cfg or SeedMapConfig()
+        sm = build_seedmap(np.asarray(ref, dtype=np.uint8), seedmap_cfg)
+        return cls.from_index(sm, ref, pipe_cfg, exec_cfg)
+
+    @classmethod
+    def from_index(cls, sm: SeedMap, ref,
+                   pipe_cfg: PipelineConfig | None = None,
+                   exec_cfg: ExecutionConfig | None = None) -> "Mapper":
+        """Build a session from an existing CSR `SeedMap` + reference.
+
+        ``ref`` may be the (L,) uint8 base array or the (Lw,) uint32
+        2-bit packing; whichever flavor the resolved plan needs that is
+        missing is derived here, once.
+        """
+        pipe_cfg = pipe_cfg or PipelineConfig()
+        exec_cfg = exec_cfg or ExecutionConfig()
+        cfg = resolved_pipeline(pipe_cfg, exec_cfg)
+        ref = jnp.asarray(ref)
+        packed_in = ref.dtype == jnp.uint32
+        mesh = exec_cfg.mesh
+
+        if exec_cfg.shard_index:
+            from repro.core.distributed import shard_seedmap
+            if not isinstance(sm, SeedMap):
+                raise TypeError("shard_index requires a CSR SeedMap")
+            ref_words = ref if packed_in else pack_2bit(ref)
+            ssm = shard_seedmap(sm, mesh.shape[exec_cfg.model_axis])
+            shardings = plan.serve_state_shardings(mesh,
+                                                   exec_cfg.model_axis)
+            state = tuple(jax.device_put(x, s) for x, s in
+                          zip((ssm.offsets, ssm.locations, ref_words),
+                              shardings))
+            raw = plan.raw_sharded_index_step(
+                mesh, cfg, sm.config, exec_cfg.batch_axes,
+                exec_cfg.model_axis)
+            index = ssm
+        else:
+            if cfg.packed_ref:
+                ref_arr = ref if packed_in else pack_2bit(ref)
+            else:
+                if packed_in:
+                    raise ValueError(
+                        "packed_ref resolved False but ref is uint32 words;"
+                        " pass the uint8 base array")
+                ref_arr = ref
+            if isinstance(sm, PaddedSeedMap) \
+                    or cfg.frontend_backend == "jnp":
+                # The staged oracle path queries the CSR tables directly
+                # (bit-exact `map_pairs` legacy); an already-padded map is
+                # taken as-is (its row width supersedes max_locs_per_seed).
+                index = sm
+            else:
+                # Kernel front end: one host-side CSR->padded relayout at
+                # the pipeline's per-seed cap, instead of the in-jit
+                # `padded_rows_device` fallback on every trace.
+                index = to_padded(sm, cap=cfg.max_locs_per_seed)
+            shardings = None
+            if mesh is not None:
+                repl = NamedSharding(mesh, P())
+                index = jax.device_put(index, repl)
+                ref_arr = jax.device_put(ref_arr, repl)
+                shardings = (repl, repl)
+            state = (index, ref_arr)
+            raw = plan.raw_pipeline_step(cfg)
+        return cls(state=state, state_shardings=shardings, raw_step=raw,
+                   pipe_cfg=cfg, exec_cfg=exec_cfg, sm_config=sm.config,
+                   index=index)
+
+    # ------------------------------------------------------------- run ---
+    def map(self, reads1, reads2) -> MapResult:
+        """Map one fixed-shape batch of FR read pairs.
+
+        ``reads2`` as-sequenced (reverse strand), exactly the legacy
+        `map_pairs` contract; results are bit-identical to it.
+        """
+        reads1 = jnp.asarray(reads1)
+        reads2 = jnp.asarray(reads2)
+        n = jnp.int32(reads1.shape[0])
+        return self._step(*self._state, reads1, reads2, n)
+
+    # ---------------------------------------------------------- stream ---
+    def _fused_step(self, reduce_fn):
+        """One jitted dispatch per stream batch: step + totals + reduce.
+
+        ``fused(state, carry, reads1, reads2, n, aux)`` with ``carry =
+        (stage_totals, reduce_state)`` donated — the rolling accumulators
+        never round-trip the host — and the read buffers donated too
+        (`ExecutionConfig.donate_reads`).
+        """
+        if reduce_fn in self._fused_cache:
+            return self._fused_cache[reduce_fn]
+        raw = self._raw_step
+        mesh = self.exec_cfg.mesh
+
+        def fused(state, carry, reads1, reads2, n, aux):
+            res = raw(*state, reads1, reads2, n)
+            totals, red = carry
+            counts = stage_stat_counts(res)
+            totals = {k: totals[k] + counts[k] for k in STAT_KEYS}
+            if reduce_fn is not None:
+                red = reduce_fn(red, res, aux)
+            return res, (totals, red)
+
+        kwargs = {"donate_argnums": (1, 2, 3)
+                  if self.exec_cfg.donate_reads else (1,)}
+        if mesh is not None:
+            batch_spec = NamedSharding(mesh, P(self.exec_cfg.batch_axes))
+            repl = NamedSharding(mesh, P())
+            kwargs.update(
+                in_shardings=(tuple(self._state_shardings), repl,
+                              batch_spec, batch_spec, repl, batch_spec),
+                out_shardings=(batch_spec, repl),
+            )
+        step = jax.jit(fused, **kwargs)
+        self._fused_cache[reduce_fn] = step
+        return step
+
+    def map_stream(self, batches, on_result=None, reduce_fn=None,
+                   reduce_init=None, warmup_batch=None) -> StreamResult:
+        """Stream ``(reads1, reads2[, aux])`` batches through the session.
+
+        Async double-buffered host loop: next batch H2D + host-side read
+        generation overlap the in-flight step; each batch is one fused
+        jitted dispatch (pipeline + device-side stage totals + the
+        optional ``reduce_fn``); the host syncs once, at the end.
+
+        ``reduce_fn(state, res, aux) -> state`` is traced into the step —
+        it must be pure jax and mask by ``res.n_valid`` (padded tail rows
+        carry garbage).  ``aux`` is the optional third element each batch
+        yields (a pytree of (B,)-leading arrays, padded alongside the
+        reads).  ``warmup_batch`` — an ``(reads1, reads2[, aux])`` tuple —
+        pre-compiles and pre-runs the step outside the timed region.
+        ``on_result(idx, res, n_valid)`` sees each device-side result one
+        batch late (pipelined).
+        """
+        stream_batch = self.exec_cfg.stream_batch
+        step = self._fused_step(reduce_fn)
+        # Copy reduce_init: the fused step donates its carry, and the
+        # caller's arrays must survive (e.g. reuse across streams).
+        carry = (init_stage_totals(), jax.tree.map(jnp.copy, reduce_init))
+
+        with warnings.catch_warnings():
+            # Donated read buffers have no size-matching output on CPU;
+            # XLA's "donated buffers were not usable" note is expected.
+            warnings.filterwarnings("ignore", message=_DONATE_MSG,
+                                    category=UserWarning)
+            if warmup_batch is not None:
+                r1, r2, aux = split_batch(warmup_batch)
+                # With no pinned stream_batch, the warmup batch fixes the
+                # stream shape — otherwise the first real batch would
+                # retrace inside the timed region.
+                if stream_batch is None:
+                    stream_batch = int(np.asarray(r1).shape[0])
+                nb = stream_batch
+                wa = jax.tree.map(lambda a: pad_tail(a, nb), aux)
+                # Throwaway carry: a deep copy, because the step donates
+                # its carry buffers and the real loop reuses reduce_init.
+                scrap_carry = jax.tree.map(jnp.copy, carry)
+                _, scrap = step(self._state, scrap_carry,
+                                pad_tail(r1, nb), pad_tail(r2, nb),
+                                jnp.int32(nb), wa)
+                jax.block_until_ready(scrap)
+
+            def dispatch(r1, r2, n, aux):
+                nonlocal carry
+                res, carry = step(self._state, carry, r1, r2,
+                                  jnp.int32(n), aux)
+                return res
+
+            n_pairs, n_batches, seconds, _ = run_stream(
+                dispatch, batches, stream_batch=stream_batch,
+                on_result=on_result)
+        totals, reduced = carry
+        return StreamResult(n_pairs=n_pairs, n_batches=n_batches,
+                            seconds=seconds,
+                            totals=fetch_stage_totals(totals),
+                            reduced=reduced)

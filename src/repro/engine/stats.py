@@ -1,0 +1,34 @@
+"""Device-side StageStats state for the streaming host loop.
+
+The pre-engine serve loop converted `stage_stats` fractions with
+``float(v)`` per batch — seven blocking host syncs every step.  Here the
+Fig. 10 counts stay device-resident int32 scalars: `Mapper._fused_step`
+adds `core.pipeline.stage_stat_counts` to this state inside the one
+jitted dispatch per batch (donated carry), and the totals are fetched
+exactly once when the stream ends.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: accumulated keys: the Fig. 10 stage counts plus the valid-pair total
+STAT_KEYS = (
+    "no_seed_hit", "adjacency_fail", "light_align_fail", "light_mapped",
+    "dp_mapped", "dp_overflow", "residual_full_dp", "n_pairs",
+)
+
+
+def init_stage_totals() -> dict:
+    """Fresh all-zero device accumulator."""
+    return {k: jnp.zeros((), jnp.int32) for k in STAT_KEYS}
+
+
+def fetch_stage_totals(totals: dict) -> dict:
+    """One host sync: device scalars -> python ints."""
+    return {k: int(v) for k, v in totals.items()}
+
+
+def stage_fractions(totals: dict) -> dict:
+    """Fig. 10 fractions from fetched (python-int) totals."""
+    n = max(totals.get("n_pairs", 0), 1)
+    return {k: totals[k] / n for k in STAT_KEYS if k != "n_pairs"}

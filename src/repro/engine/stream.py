@@ -1,0 +1,121 @@
+"""The async double-buffered host loop behind ``Mapper.map_stream``.
+
+The pre-engine serve loop was strictly serial per batch: simulate/load
+reads -> dispatch the step -> immediately block on ``np.asarray`` and
+seven ``float()`` stage-stat syncs -> next batch.  This loop exploits
+jax's async dispatch so the stages pipeline:
+
+  * the *next* batch is pulled from the (host-side) iterator and its H2D
+    transfer started while the device still computes the current step —
+    read simulation / FASTQ decode overlaps alignment;
+  * each batch is ONE fused dispatch: pipeline step + device-side
+    StageStats accumulation + the caller's reduction (e.g. the serve
+    accuracy counters) run in a single jitted call with a donated carry,
+    so the host issues no follow-up work and syncs exactly once, at the
+    end;
+  * per-batch read buffers are donated to XLA (they are never reused);
+  * consumers observe results one batch late (``on_result`` for batch k
+    fires after batch k+1 was dispatched), so even a syncing consumer
+    only ever waits on work that is already complete;
+  * a ragged tail batch (and its aux pytree) is padded up to the stream
+    batch shape and masked via ``MapResult.n_valid`` — no recompile,
+    padded rows count toward nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.engine.stats import stage_fractions
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Aggregate outcome of one `map_stream` run.
+
+    ``totals`` are the device-accumulated Fig. 10 stage counts (python
+    ints, fetched once); ``reduced`` is the final state of the caller's
+    ``reduce_fn`` (device arrays, already fully computed — reading them
+    costs one sync), or None.  ``seconds`` covers dispatch of the first
+    batch through full drain of the last (compile/warmup excluded when a
+    warmup batch was given).
+    """
+
+    n_pairs: int
+    n_batches: int
+    seconds: float
+    totals: dict
+    reduced: object = None
+
+    @property
+    def pairs_per_s(self) -> float:
+        return self.n_pairs / max(self.seconds, 1e-9)
+
+    def mbp_per_s(self, read_len: int) -> float:
+        return self.n_pairs * 2 * read_len / max(self.seconds, 1e-9) / 1e6
+
+    @property
+    def fractions(self) -> dict:
+        return stage_fractions(self.totals)
+
+
+def pad_tail(arr, batch: int):
+    """Zero-pad axis 0 of a ragged tail array up to the fixed stream shape."""
+    arr = np.asarray(arr)
+    if arr.shape[0] == batch:
+        return arr
+    if arr.shape[0] > batch:
+        raise ValueError(
+            f"stream batch of {arr.shape[0]} rows exceeds the session's "
+            f"fixed stream_batch={batch}")
+    pad = np.zeros((batch - arr.shape[0],) + arr.shape[1:], arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def split_batch(item):
+    """(reads1, reads2[, aux]) -> (reads1, reads2, aux_pytree)."""
+    if len(item) == 2:
+        return item[0], item[1], ()
+    r1, r2, aux = item
+    return r1, r2, aux
+
+
+def run_stream(dispatch, batches, *, stream_batch=None,
+               on_result=None) -> tuple[int, int, float, object]:
+    """Drive ``dispatch(reads1, reads2, n, aux) -> MapResult`` over batches.
+
+    ``batches`` yields ``(reads1, reads2)`` or ``(reads1, reads2, aux)``
+    host items; the first batch fixes the stream shape unless
+    ``stream_batch`` pins it.  Returns ``(n_pairs, n_batches, seconds,
+    last_result)``; accumulation state lives inside ``dispatch`` (the
+    Mapper's fused carry).
+    """
+    n_pairs = 0
+    n_batches = 0
+    prev = None
+    res = None
+    t0 = time.time()
+    for idx, item in enumerate(batches):
+        reads1, reads2, aux = split_batch(item)
+        n = int(np.asarray(reads1).shape[0])
+        if stream_batch is None:
+            stream_batch = n
+        r1 = pad_tail(reads1, stream_batch)
+        r2 = pad_tail(reads2, stream_batch)
+        aux = jax.tree.map(lambda a: pad_tail(a, stream_batch), aux)
+        # Async dispatch: the host returns immediately and moves on to
+        # simulate/transfer the next batch while the device works.
+        res = dispatch(r1, r2, n, aux)
+        n_pairs += n
+        n_batches += 1
+        if prev is not None and on_result is not None:
+            on_result(*prev)
+        prev = (idx, res, n)
+    if prev is not None and on_result is not None:
+        on_result(*prev)
+    if res is not None:
+        res.pos1.block_until_ready()
+    return n_pairs, n_batches, time.time() - t0, res

@@ -40,9 +40,20 @@ compare `searchsorted`, per-occurrence partner probing (duplicate
 read-1 starts probe successive read-2 starts), `(start1, start2)` pair
 dedup via adjacent-compare, and cumulative-sum front compaction.
 
-The DMA protocol is start-all/wait-all per grid step (the seed
-candidate_align protocol); cross-step ping-pong double-buffering is a
-known follow-up (ROADMAP).
+Double-buffered row DMA (ping-pong protocol)
+--------------------------------------------
+The row-gather kernel reuses the `candidate_align` cross-grid-step
+protocol: the `(B, S)` DMA start tables are scalar-prefetch operands
+(SMEM, visible to every step), so step ``g`` issues step ``g+1``'s
+2*S*BLK row fetches into the *other* of two VMEM location banks while its
+own merge/filter compute runs, then waits only on its own bank's
+semaphores.  Each (bank, mate, row, seed) DMA has its own semaphore; the
+refill of the bank step ``g`` computed on is issued during step ``g+1``,
+after step ``g``'s compute has fully completed (grid steps run
+sequentially), so no write-after-read hazard exists.  This replaces the
+start-all/wait-all
+burst the kernel shipped with — the Location-Table HBM traffic of step
+g+1 hides behind the `(BLK, M, M)` sort/filter compute of step g.
 """
 from __future__ import annotations
 
@@ -59,6 +70,7 @@ from repro.kernels.xxhash.kernel import xxhash32_lanes
 DEFAULT_BLOCK = 8        # batch rows per grid step (2*S row DMAs each)
 HASH_BLOCK = 128         # rows per seed_buckets grid step
 MAX_SEED_WORDS = 4       # 16-byte hash input: seed_len <= 64
+N_BANKS = 2              # ping-pong VMEM location banks
 
 # Rows per pallas launch (ops.py chunks bigger batches): the two (rows, S)
 # scalar-prefetch DMA tables are SMEM-resident, so bound them the same way
@@ -197,37 +209,53 @@ def _frontend_kernel(
     pos1_ref, pos2_ref,          # (BLK, C) int32
     n_ref, nh1_ref, nh2_ref,     # (BLK, 1) int32
     # scratch
-    loc1, loc2,                  # (BLK, S*K) int32 VMEM
-    sems,                        # (2, BLK, S) DMA semaphores
+    loc1, loc2,                  # (N_BANKS, BLK, S*K) int32 VMEM
+    sems,                        # (N_BANKS, 2, BLK, S) DMA semaphores
     *,
     S: int, K: int, seed_offs: tuple, delta: int, cap: int,
 ):
     BLK = pos1_ref.shape[0]
     g = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+    bank = jax.lax.rem(g, N_BANKS)
 
-    def _dma(mate, i):
+    # ---- ping-pong row streaming HBM -> VMEM (candidate_align protocol) --
+    def _dma(bnk, mate, step, i):
         r, s = i // S, i % S
         starts = (sdma1_ref, sdma2_ref)[mate]
         loc = (loc1, loc2)[mate]
-        st = starts[g * BLK + r, s]
+        st = starts[step * BLK + r, s]
         return pltpu.make_async_copy(table_any.at[pl.ds(st, K)],
-                                     loc.at[r, pl.ds(s * K, K)],
-                                     sems.at[mate, r, s])
+                                     loc.at[bnk, r, pl.ds(s * K, K)],
+                                     sems.at[bnk, mate, r, s])
 
-    def issue(i, _):
-        _dma(0, i).start()
-        _dma(1, i).start()
-        return 0
-    jax.lax.fori_loop(0, BLK * S, issue, 0)
+    def _start_step(step, bnk):
+        def issue(i, _):
+            _dma(bnk, 0, step, i).start()
+            _dma(bnk, 1, step, i).start()
+            return 0
+        jax.lax.fori_loop(0, BLK * S, issue, 0)
 
-    def drain(i, _):
-        _dma(0, i).wait()
-        _dma(1, i).wait()
-        return 0
-    jax.lax.fori_loop(0, BLK * S, drain, 0)
+    def _wait_step(step, bnk):
+        def drain(i, _):
+            _dma(bnk, 0, step, i).wait()
+            _dma(bnk, 1, step, i).wait()
+            return 0
+        jax.lax.fori_loop(0, BLK * S, drain, 0)
+
+    @pl.when(g == 0)
+    def _():                     # warm-up: first step fetches its own bank
+        _start_step(0, 0)
+
+    @pl.when(g + 1 < nsteps)
+    def _():                     # prefetch next step into the other bank
+        _start_step(g + 1, jax.lax.rem(g + 1, N_BANKS))
+
+    _wait_step(g, bank)          # this step's rows are now resident
 
     pos1, pos2, n, nh1, nh2 = merge_filter_block(
-        loc1[...], loc2[...], seed_offs=seed_offs, K=K, delta=delta, cap=cap)
+        loc1[bank], loc2[bank], seed_offs=seed_offs, K=K, delta=delta,
+        cap=cap)
     pos1_ref[...] = pos1
     pos2_ref[...] = pos2
     n_ref[...] = n
@@ -262,9 +290,9 @@ def pair_frontend_pallas(
         out_specs=[row_spec(C), row_spec(C),
                    row_spec(1), row_spec(1), row_spec(1)],
         scratch_shapes=[
-            pltpu.VMEM((block, S * K), jnp.int32),
-            pltpu.VMEM((block, S * K), jnp.int32),
-            pltpu.SemaphoreType.DMA((2, block, S)),
+            pltpu.VMEM((N_BANKS, block, S * K), jnp.int32),
+            pltpu.VMEM((N_BANKS, block, S * K), jnp.int32),
+            pltpu.SemaphoreType.DMA((N_BANKS, 2, block, S)),
         ],
     )
     outs = pl.pallas_call(

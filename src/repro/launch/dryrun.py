@@ -35,12 +35,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
 from repro.configs.registry import ARCH_NAMES, get_config
-from repro.core.genpairx_step import (
-    GenPairScale, genpair_input_specs, genpair_shardings,
-    make_genpair_serve_step,
-)
+from repro.core.genpairx_step import GenPairScale, genpair_input_specs
 from repro.core.pipeline import PipelineConfig
 from repro.core.seedmap import SeedMapConfig
+from repro.engine.config import resolved_pipeline
+from repro.engine.plan import mesh_serve_jit
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import (
     decode_step, input_specs, loss_fn, model_abstract_params,
@@ -330,26 +329,19 @@ def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def lower_genpair(mesh, rules: ShardingRules,
                   pipe: PipelineConfig | None = None):
     # The serve_256k cell's pipeline config (packed 2-bit reference etc.)
-    # lives in configs/genpair.py next to the scale constants.
+    # lives in configs/genpair.py next to the scale constants.  The step
+    # itself comes pre-jitted (with its shardings) from the engine's plan
+    # layer — the same jit a `Mapper(shard_index=True)` session executes —
+    # with the config resolved once against the serve plan's packed
+    # default.
     from repro.configs.genpair import PIPELINE
     scale = GenPairScale()
-    pipe = pipe or PIPELINE
+    pipe = resolved_pipeline(pipe or PIPELINE, packed_default=True)
     sm_cfg = SeedMapConfig(table_bits=scale.table_bits)
     n_model = mesh.shape[rules.tensor_axis]
     specs = genpair_input_specs(scale, n_model)
-    shard = genpair_shardings(mesh, rules.batch_axes, rules.tensor_axis)
-    step = make_genpair_serve_step(mesh, pipe, sm_cfg, rules.batch_axes,
-                                   rules.tensor_axis)
-    out_sh = NamedSharding(mesh, P(rules.batch_axes))
-    fn = jax.jit(
-        step,
-        in_shardings=tuple(shard[k] for k in
-                           ("offsets", "locations", "ref_words",
-                            "reads1", "reads2")),
-        out_shardings=jax.tree.map(lambda _: out_sh, jax.eval_shape(
-            step, *(specs[k] for k in ("offsets", "locations", "ref_words",
-                                       "reads1", "reads2")))),
-    )
+    fn = mesh_serve_jit(mesh, pipe, sm_cfg, rules.batch_axes,
+                        rules.tensor_axis)
     return fn.lower(*(specs[k] for k in
                       ("offsets", "locations", "ref_words", "reads1",
                        "reads2"))), mesh.devices.size

@@ -1,11 +1,19 @@
 """Genomics serving driver: batched paired-end read mapping (the paper's
 workload kind).
 
-Offline stage: build (or load) the reference + SeedMap index.
-Online stage:  stream fixed-size batches of FR read pairs through the
-jitted GenPair pipeline, reporting throughput (pairs/s and Mbp/s — the
-paper's unit), per-stage residual fractions (Fig. 10) and mapping accuracy
-against the simulator's ground truth.
+Offline stage: build the reference + SeedMap index and a `repro.engine`
+`Mapper` session (backends, reference flavor and SeedMap layout resolved
+once).  Online stage: stream fixed-size batches of FR read pairs through
+``mapper.map_stream`` — the async double-buffered host loop that overlaps
+read simulation and H2D with the in-flight step, accumulates StageStats
+(Fig. 10) *and* the accuracy counters on device, and syncs the host
+exactly once at the end.  Accuracy is validated per mate (``pos1`` vs
+``true_start1`` and ``pos2`` vs ``true_start2``) and at pair level.
+
+``--loop legacy`` keeps the pre-engine loop — one blocking `map_pairs`
+call plus seven ``float()`` stage-stat syncs per batch — as the measured
+baseline; ``--compare`` runs both and writes the speedup JSON artifact CI
+uploads.
 
 Usage (CPU):
   PYTHONPATH=src python -m repro.launch.serve --ref-len 500000 \
@@ -14,50 +22,152 @@ Usage (CPU):
 from __future__ import annotations
 
 import argparse
+import functools
 import json
+import os
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap, map_pairs,
-    random_reference, stage_stats,
+    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
+    map_pairs_impl, random_reference, stage_stats,
 )
 from repro.core.seedmap import INVALID_LOC
 from repro.data.pipeline import ReadStreamConfig, read_pairs_for_step
+from repro.engine import ExecutionConfig, Mapper
+
+ACC_KEYS = ("mapped1", "mapped2", "correct1", "correct2",
+            "pair_mapped", "pair_correct")
+
+# Module-level jit so repeat legacy runs (compare_loops) share one compile.
+_legacy_step = jax.jit(map_pairs_impl, static_argnames=("cfg",))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_accuracy_reduce(max_gap: int):
+    """Device-side per-batch accuracy reduction (both mates + pair).
+
+    The pre-engine loop validated only mate 1; this scores ``pos2``
+    against ``true_start2`` too, plus pair-level correctness (both mates
+    mapped / both within ``max_gap``).  Traced into `map_stream`'s fused
+    per-batch dispatch, so it costs no extra host work or sync; padded
+    tail rows are excluded via ``res.n_valid``.
+    """
+
+    def reduce(acc, res, aux):
+        t1, t2 = aux
+        v = res.n_valid
+        m1 = (res.pos1 != INVALID_LOC) & v
+        m2 = (res.pos2 != INVALID_LOC) & v
+        c1 = m1 & (jnp.abs(res.pos1 - t1) <= max_gap)
+        c2 = m2 & (jnp.abs(res.pos2 - t2) <= max_gap)
+        new = {
+            "mapped1": m1, "mapped2": m2, "correct1": c1, "correct2": c2,
+            "pair_mapped": m1 & m2, "pair_correct": c1 & c2,
+        }
+        return {k: acc[k] + jnp.sum(new[k].astype(jnp.int32))
+                for k in ACC_KEYS}
+
+    return reduce
 
 
 def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
           table_bits: int = 20, sub_rate: float = 1e-3,
           pipe_cfg: PipelineConfig = PipelineConfig(),
-          seed: int = 0, verbose: bool = True) -> dict:
+          seed: int = 0, verbose: bool = True, loop: str = "stream") -> dict:
     rng = np.random.default_rng(seed)
     t0 = time.time()
     ref = random_reference(ref_len, rng)
     sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
     t_index = time.time() - t0
-    ref_j = jnp.asarray(ref)
 
     stream = ReadStreamConfig(batch=batch, read_len=pipe_cfg.read_len,
                               seed=seed)
     sim_cfg = ReadSimConfig(read_len=pipe_cfg.read_len, sub_rate=sub_rate)
 
-    # warmup/compile on batch 0
+    if loop == "legacy":
+        out = _serve_legacy(ref, sm, stream, sim_cfg, batch, batches,
+                            pipe_cfg, t_index)
+    elif loop == "stream":
+        out = _serve_stream(ref, sm, stream, sim_cfg, batch, batches,
+                            pipe_cfg, t_index)
+    else:
+        raise ValueError(f"unknown loop {loop!r}; expected stream|legacy")
+    if verbose:
+        print(json.dumps(out, indent=1), flush=True)
+    return out
+
+
+def _serve_stream(ref, sm, stream, sim_cfg, batch, batches, pipe_cfg,
+                  t_index, mapper: Mapper | None = None) -> dict:
+    if mapper is None:
+        mapper = Mapper.from_index(
+            sm, ref, pipe_cfg, ExecutionConfig(stream_batch=batch))
+
+    def gen():
+        for step in range(batches):
+            sim = read_pairs_for_step(ref, stream, step, sim_cfg)
+            yield sim.reads1, sim.reads2, (sim.true_start1, sim.true_start2)
+
+    # warmup/compile on batch 0 (the legacy loop warms the same way)
     sim0 = read_pairs_for_step(ref, stream, 0, sim_cfg)
-    res = map_pairs(sm, ref_j, jnp.asarray(sim0.reads1),
-                    jnp.asarray(sim0.reads2), pipe_cfg)
+    sr = mapper.map_stream(
+        gen(),
+        reduce_fn=_make_accuracy_reduce(pipe_cfg.max_gap),
+        reduce_init={k: jnp.zeros((), jnp.int32) for k in ACC_KEYS},
+        warmup_batch=(sim0.reads1, sim0.reads2,
+                      (sim0.true_start1, sim0.true_start2)))
+    a = {k: int(v) for k, v in sr.reduced.items()}
+    n = max(sr.n_pairs, 1)
+    return {
+        "pairs": sr.n_pairs,
+        "pairs_per_s": sr.pairs_per_s,
+        "mbp_per_s": sr.mbp_per_s(pipe_cfg.read_len),
+        "index_build_s": t_index,
+        "loop": "stream",
+        # mate-1 keys keep their historical names; mate-2 and pair-level
+        # correctness are the serve accuracy-check fix.
+        "mapped_frac": a["mapped1"] / n,
+        "correct_of_mapped": a["correct1"] / max(a["mapped1"], 1),
+        "mapped_frac2": a["mapped2"] / n,
+        "correct_of_mapped2": a["correct2"] / max(a["mapped2"], 1),
+        "pair_mapped_frac": a["pair_mapped"] / n,
+        "pair_correct_of_mapped": a["pair_correct"] / max(a["pair_mapped"],
+                                                          1),
+        **sr.fractions,
+    }
+
+
+def _serve_legacy(ref, sm, stream, sim_cfg, batch, batches, pipe_cfg,
+                  t_index) -> dict:
+    """The pre-engine host loop, kept verbatim as the measured baseline.
+
+    Strictly serial per batch: simulate -> blocking map -> seven
+    ``float()`` stage-stat host syncs -> host-side mate-1-only accuracy.
+    `map_stream` must beat this by >= 1.2x at batch 512 on CPU (CI
+    artifact); it is not wired through the deprecation shim so the
+    comparison isolates the loop, not warning overhead.
+    """
+    step_fn = _legacy_step
+    ref_j = jnp.asarray(ref)
+
+    sim0 = read_pairs_for_step(ref, stream, 0, sim_cfg)
+    res = step_fn(sm, ref_j, jnp.asarray(sim0.reads1),
+                  jnp.asarray(sim0.reads2), pipe_cfg)
     res.pos1.block_until_ready()
 
     n_pairs = 0
     correct = 0
     mapped = 0
-    agg = {}
+    agg: dict[str, float] = {}
     t1 = time.time()
     for step in range(batches):
         sim = read_pairs_for_step(ref, stream, step, sim_cfg)
-        res = map_pairs(sm, ref_j, jnp.asarray(sim.reads1),
-                        jnp.asarray(sim.reads2), pipe_cfg)
+        res = step_fn(sm, ref_j, jnp.asarray(sim.reads1),
+                      jnp.asarray(sim.reads2), pipe_cfg)
         pos1 = np.asarray(res.pos1)
         ok = pos1 != INVALID_LOC
         mapped += int(ok.sum())
@@ -67,18 +177,89 @@ def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
         for k, v in stage_stats(res).items():
             agg[k] = agg.get(k, 0.0) + float(v)
     dt = time.time() - t1
-    out = {
+    return {
         "pairs": n_pairs,
         "pairs_per_s": n_pairs / dt,
         "mbp_per_s": n_pairs * 2 * pipe_cfg.read_len / dt / 1e6,
         "index_build_s": t_index,
+        "loop": "legacy",
         "mapped_frac": mapped / n_pairs,
         "correct_of_mapped": correct / max(mapped, 1),
         **{k: v / batches for k, v in agg.items()},
     }
-    if verbose:
-        print(json.dumps(out, indent=1), flush=True)
-    return out
+
+
+def compare_loops(out_path: str | None = None, reps: int = 3,
+                  ref_len: int = 500_000, batch: int = 512,
+                  batches: int = 10, table_bits: int = 20,
+                  sub_rate: float = 1e-3,
+                  pipe_cfg: PipelineConfig = PipelineConfig(),
+                  seed: int = 0) -> dict:
+    """Run the legacy and stream loops on identical work; report speedup.
+
+    The acceptance gate for the engine host loop: ``stream`` must reach
+    >= 1.2x the legacy pairs/s at batch 512 on CPU.  Shared CI boxes
+    drift by tens of percent between phases (burst throttling), so the
+    harness (a) builds the index and compiles both loops ONCE up front —
+    no compile/build burn between timed regions — and (b) alternates
+    short timed runs in counterbalanced order, scoring the *median of
+    adjacent-pair ratios* rather than one back-to-back measurement.
+    Writes the JSON artifact CI uploads.
+    """
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    ref = random_reference(ref_len, rng)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+    t_index = time.time() - t0
+    stream = ReadStreamConfig(batch=batch, read_len=pipe_cfg.read_len,
+                              seed=seed)
+    sim_cfg = ReadSimConfig(read_len=pipe_cfg.read_len, sub_rate=sub_rate)
+    mapper = Mapper.from_index(
+        sm, ref, pipe_cfg, ExecutionConfig(stream_batch=batch))
+
+    run = {
+        "legacy": lambda: _serve_legacy(ref, sm, stream, sim_cfg, batch,
+                                        batches, pipe_cfg, t_index),
+        "stream": lambda: _serve_stream(ref, sm, stream, sim_cfg, batch,
+                                        batches, pipe_cfg, t_index,
+                                        mapper=mapper),
+    }
+    runs: dict[str, list] = {"legacy": [], "stream": []}
+    ratios = []
+    for rep in range(reps):
+        order = ("legacy", "stream") if rep % 2 == 0 else ("stream",
+                                                           "legacy")
+        pair = {}
+        for loop in order:
+            pair[loop] = run[loop]()
+            runs[loop].append(pair[loop])
+        ratios.append(pair["stream"]["pairs_per_s"]
+                      / max(pair["legacy"]["pairs_per_s"], 1e-9))
+    # Best-of runs are labelled as such: they may come from different
+    # reps, so the headline ratio is the median of SAME-rep pairs, not
+    # stream_best / legacy_best.
+    legacy = max(runs["legacy"], key=lambda r: r["pairs_per_s"])
+    streamed = max(runs["stream"], key=lambda r: r["pairs_per_s"])
+    result = {
+        "legacy_best": legacy,
+        "stream_best": streamed,
+        "legacy_runs_pairs_per_s": [r["pairs_per_s"]
+                                    for r in runs["legacy"]],
+        "stream_runs_pairs_per_s": [r["pairs_per_s"]
+                                    for r in runs["stream"]],
+        "per_rep_speedups": ratios,
+        "speedup_pairs_per_s": float(np.median(ratios)),
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+    print(json.dumps({"speedup_pairs_per_s": result["speedup_pairs_per_s"],
+                      "per_rep_speedups": ratios,
+                      "legacy_best_pairs_per_s": legacy["pairs_per_s"],
+                      "stream_best_pairs_per_s": streamed["pairs_per_s"]},
+                     indent=1), flush=True)
+    return result
 
 
 def main():
@@ -88,9 +269,26 @@ def main():
     ap.add_argument("--batches", type=int, default=10)
     ap.add_argument("--table-bits", type=int, default=20)
     ap.add_argument("--sub-rate", type=float, default=1e-3)
+    ap.add_argument("--loop", choices=("stream", "legacy"),
+                    default="stream")
+    ap.add_argument("--compare", action="store_true",
+                    help="run legacy + stream loops and report the speedup")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="--compare repetitions (median of per-rep ratios)")
+    ap.add_argument("--out", default=None,
+                    help="write the result JSON here (--compare artifact)")
     args = ap.parse_args()
-    serve(ref_len=args.ref_len, batch=args.batch, batches=args.batches,
-          table_bits=args.table_bits, sub_rate=args.sub_rate)
+    kwargs = dict(ref_len=args.ref_len, batch=args.batch,
+                  batches=args.batches, table_bits=args.table_bits,
+                  sub_rate=args.sub_rate)
+    if args.compare:
+        compare_loops(out_path=args.out, reps=args.reps, **kwargs)
+        return
+    out = serve(loop=args.loop, **kwargs)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -5,12 +5,18 @@ subprocess (the main pytest process must keep seeing 1 device).  Asserts:
 
   1. the shard_map'd bucket-sharded SeedMap query (the NMSL analogue)
      returns exactly the single-device CSR query's results;
-  2. the full genome-scale serve step (packed reference, sharded tables)
-     maps simulated pairs to the same positions as the reference pipeline;
-  3. the data-parallel map_pairs wrapper equals single-device map_pairs;
+  2. the engine's sharded-index plan (Mapper with shard_index=True — the
+     genome-scale serve step, packed reference, sharded tables) maps
+     simulated pairs to the same positions as the reference pipeline;
+  3. the engine's data-parallel plan (Mapper with mesh=...) equals
+     single-device map_pairs, and the deprecated
+     make_distributed_map_pairs shim warns once and still delegates to
+     the same results;
   4. the G2 prescreen (prescreen_top=2) preserves the mapping;
   5. the sharded fused front end (make_distributed_frontend) equals the
-     staged single-device front end.
+     staged single-device front end;
+  6. mapper.map_stream on the mesh plan handles a ragged tail batch
+     (padding + n_valid) and its device-side stage totals match.
 
 Exit code 0 = all checks passed.
 """
@@ -18,25 +24,26 @@ import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
+import warnings  # noqa: E402
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import (  # noqa: E402
     PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap, map_pairs,
-    random_reference, simulate_pairs,
+    random_reference, simulate_pairs, stage_stat_counts,
 )
 from repro.core.distributed import (  # noqa: E402
     make_distributed_frontend, make_distributed_map_pairs,
     make_sharded_query, shard_seedmap,
 )
 from repro.core.pair_filter import paired_adjacency_filter  # noqa: E402
-from repro.core.encoding import pack_2bit  # noqa: E402
-from repro.core.genpairx_step import make_genpair_serve_step  # noqa: E402
 from repro.core.pipeline import PipelineConfig  # noqa: E402
 from repro.core.query import query_read_batch  # noqa: E402
 from repro.core.seeding import seed_read_batch  # noqa: E402
 from repro.core.seedmap import INVALID_LOC  # noqa: E402
+from repro.engine import ExecutionConfig, Mapper  # noqa: E402
 from repro.launch.mesh import make_auto_mesh  # noqa: E402
 
 
@@ -62,10 +69,10 @@ def main():
                                   np.asarray(q_shard.starts))
     print("ok: sharded query == CSR query")
 
-    # ---- 2. genome-scale serve step == reference pipeline ----------------
-    ref_words = jnp.asarray(pack_2bit(ref))
-    step = make_genpair_serve_step(mesh, cfg, sm.config)
-    res_d = step(ssm.offsets, ssm.locations, ref_words, reads1, reads2)
+    # ---- 2. engine sharded-index plan == reference pipeline --------------
+    m_shard = Mapper.from_index(
+        sm, ref, cfg, ExecutionConfig(mesh=mesh, shard_index=True))
+    res_d = m_shard.map(reads1, reads2)
     res_s = map_pairs(sm, jnp.asarray(ref), reads1, reads2, cfg)
     np.testing.assert_array_equal(np.asarray(res_d.pos1),
                                   np.asarray(res_s.pos1))
@@ -73,20 +80,33 @@ def main():
                                   np.asarray(res_s.method))
     np.testing.assert_array_equal(np.asarray(res_d.score1),
                                   np.asarray(res_s.score1))
-    print("ok: distributed serve step == reference pipeline")
+    print("ok: engine sharded-index plan == reference pipeline")
 
-    # ---- 3. DP-sharded map_pairs == single-device ------------------------
-    dmap = make_distributed_map_pairs(mesh, cfg)
-    res_dp = dmap(sm, jnp.asarray(ref), reads1, reads2)
-    np.testing.assert_array_equal(np.asarray(res_dp.pos1),
+    # ---- 3. engine data-parallel plan == single-device; shim delegates ---
+    m_dp = Mapper.from_index(sm, ref, cfg, ExecutionConfig(mesh=mesh))
+    res_dp = m_dp.map(reads1, reads2)
+    for f in res_s._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(res_dp, f)),
+                                      np.asarray(getattr(res_s, f)),
+                                      err_msg=f)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        dmap = make_distributed_map_pairs(mesh, cfg)
+        make_distributed_map_pairs(mesh, cfg)  # warn-once: no second warning
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in caught]
+    res_shim = dmap(sm, jnp.asarray(ref), reads1, reads2)
+    np.testing.assert_array_equal(np.asarray(res_shim.pos1),
                                   np.asarray(res_s.pos1))
-    print("ok: data-parallel map_pairs == single-device")
+    print("ok: engine data-parallel plan == single-device (+ shim warns "
+          "once, delegates)")
 
     # ---- 4. G2 prescreen keeps the mapping (§Perf beyond-paper opt) ----
     import dataclasses
     cfg_p = dataclasses.replace(cfg, prescreen_top=2)
-    step_p = make_genpair_serve_step(mesh, cfg_p, sm.config)
-    res_p = step_p(ssm.offsets, ssm.locations, ref_words, reads1, reads2)
+    m_p = Mapper.from_index(
+        sm, ref, cfg_p, ExecutionConfig(mesh=mesh, shard_index=True))
+    res_p = m_p.map(reads1, reads2)
     same_pos = (np.asarray(res_p.pos1) == np.asarray(res_s.pos1)).mean()
     assert same_pos >= 0.97, f"prescreen changed {1-same_pos:.1%} of pos"
     light_p = (np.asarray(res_p.method) == 1).mean()
@@ -109,6 +129,21 @@ def main():
     np.testing.assert_array_equal(np.asarray(fe.n_hits1),
                                   np.asarray(q1.n_hits))
     print("ok: distributed fused front end == staged front end")
+
+    # ---- 6. mesh map_stream: ragged tail padding + device stage totals --
+    m_stream = Mapper.from_index(
+        sm, ref, cfg, ExecutionConfig(mesh=mesh, stream_batch=64))
+    tail = 24  # ragged: padded to 64 on device, masked via n_valid
+    sr = m_stream.map_stream(
+        iter([(sim.reads1, sim.reads2),
+              (sim.reads1[:tail], sim.reads2[:tail])]))
+    assert sr.n_pairs == 64 + tail == sr.totals["n_pairs"], sr.totals
+    full = {k: int(v) for k, v in stage_stat_counts(res_s).items()}
+    head = {k: int(v) for k, v in stage_stat_counts(
+        jax.tree.map(lambda x: x[:tail], res_s)).items()}
+    want = {k: full[k] + head[k] for k in full}
+    assert sr.totals == want, (sr.totals, want)
+    print("ok: mesh map_stream ragged tail + device-side stage totals")
 
 
 if __name__ == "__main__":

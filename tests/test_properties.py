@@ -15,6 +15,11 @@
   P7  the fused front end's merge+filter (kernels/pair_frontend, both
       backends) equals `merge_read_starts` + the same naive oracle end
       to end from raw per-seed locations.
+  P8  CSR `SeedMap` -> `PaddedSeedMap` relayout round-trips: host-side
+      `to_padded(sm, cap)` equals the in-jit `padded_rows_device`
+      derivation and a padded-row query equals the CSR query at the same
+      cap — the contract that lets the engine swap index layouts without
+      changing `Mapper.map` results.
 """
 import jax
 import jax.numpy as jnp
@@ -112,6 +117,32 @@ def test_p3_query_returns_true_occurrences(seed):
     locs, count = query_csr(sm, h, 16)
     got = set(np.asarray(locs).ravel().tolist()) - {int(INVALID_LOC)}
     assert set(sites) <= got, (sorted(got), sites)
+
+
+@given(
+    seed=st.integers(0, 2**31),
+    ref_len=st.integers(2_000, 12_000),
+    table_bits=st.integers(8, 12),
+    cap=st.integers(2, 48),
+)
+@settings(max_examples=20, deadline=None)
+def test_p8_padded_relayout_round_trip(seed, ref_len, table_bits, cap):
+    from repro.core import to_padded
+    from repro.core.query import padded_rows_device, query_padded
+
+    rng = np.random.default_rng(seed)
+    ref = rng.integers(0, 4, ref_len, dtype=np.uint8)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+    psm = to_padded(sm, cap=cap)
+    assert psm.rows.shape == (sm.config.table_size, cap)
+    np.testing.assert_array_equal(
+        np.asarray(psm.rows), np.asarray(padded_rows_device(sm, cap)))
+    hashes = rng.integers(0, 2**32, size=64, dtype=np.uint32)
+    locs_csr, n_csr = query_csr(sm, jnp.asarray(hashes), cap)
+    locs_pad, n_pad = query_padded(psm, jnp.asarray(hashes))
+    np.testing.assert_array_equal(np.asarray(locs_csr),
+                                  np.asarray(locs_pad))
+    np.testing.assert_array_equal(np.asarray(n_csr), np.asarray(n_pad))
 
 
 @given(st.integers(0, 2**31))
