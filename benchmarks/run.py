@@ -31,6 +31,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("cand_align", "benchmarks.bench_candidate_align"),
     ("pair_frontend", "benchmarks.bench_pair_frontend"),
+    ("residual_dp", "benchmarks.bench_residual_dp"),
 ]
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")

@@ -6,9 +6,13 @@ window has free leading/trailing gaps.  The row recurrence is vectorized
 with the running-max (scan) formulation so each row is O(W) vector work —
 the TPU-native mapping of GenDP's systolic wavefront (DESIGN.md §2).
 
-`gotoh_semiglobal` is the jit-able score path used by the pipeline;
-`gotoh_align_np` is the host-side traceback oracle (also used by tests to
-validate Light Alignment's exactness on single-gap-run inputs).
+`gotoh_semiglobal` is the unbanded jit-able score path;
+`gotoh_semiglobal_banded` restricts the DP to the cells within ``band`` of
+the window's center diagonal (the bit-exact jnp oracle for the
+`kernels/residual_dp` and `kernels/banded_sw` Pallas families) — with
+``band >= W`` it *is* `gotoh_semiglobal`, the exactness anchor the tests
+pin.  `gotoh_align_np` is the host-side traceback oracle (also used by
+tests to validate Light Alignment's exactness on single-gap-run inputs).
 """
 from __future__ import annotations
 
@@ -69,6 +73,159 @@ def gotoh_semiglobal(
 
     (h_last, _, _), _ = jax.lax.scan(
         row, (h0, e0, jnp.int32(1)), read.T  # scan over read positions
+    )
+    score = jnp.max(h_last, axis=-1)
+    ref_end = jnp.argmax(h_last, axis=-1).astype(jnp.int32)
+    return DPResult(score=score, ref_end=ref_end)
+
+
+def band_center(read_len: int, win_len: int) -> int:
+    """Center diagonal offset of a banded semiglobal DP.
+
+    A read placed symmetrically in its window starts at column
+    ``(W - R) // 2`` — for the pipeline's ``W = R + 2*dp_pad`` windows
+    that is exactly ``dp_pad``, the candidate start position.  Single
+    source of truth for the oracle and both kernel families: the band
+    admits cells with ``|j - i - center| <= band``.
+    """
+    return (win_len - read_len) // 2
+
+
+def gotoh_semiglobal_banded(
+    read: jnp.ndarray,
+    refwin: jnp.ndarray,
+    band: int | None,
+    scoring: Scoring = Scoring(),
+) -> DPResult:
+    """Banded batched semiglobal Gotoh. read (B, R), refwin (B, W).
+
+    Only cells within ``band`` of the center diagonal
+    (:func:`band_center`) are computed; everything outside is ``NEG``, so
+    scores can never propagate through out-of-band cells.  The result
+    equals the full DP whenever the optimal alignment's path stays inside
+    the band; ``band is None`` or ``band >= W`` delegates to
+    :func:`gotoh_semiglobal` (exact full DP, bit-for-bit).
+
+    Like the Pallas kernels (which share the same math via
+    `banded_sw.kernel.dp_block`), this computes only the ``K = 2*band +
+    1``-wide moving frame per row — O(R*K) instead of O(R*W) work, the
+    banding speedup realized on every backend.  Frame slot ``k`` of row
+    ``i`` is column ``j = i + c - band + k``; vertical moves shift the
+    carried H/E rows one slot left, the horizontal gap is a running max
+    inside the frame, and frame cells outside ``[0, W]`` are masked dead.
+    `_gotoh_banded_masked` is the O(R*W) masked-full-width formulation
+    kept as the independent cross-check for this frame arithmetic.
+    """
+    B, R = read.shape
+    W = refwin.shape[-1]
+    if band is None or band >= W:
+        return gotoh_semiglobal(read, refwin, scoring)
+    c = band_center(R, W)
+    K = 2 * band + 1
+    match = jnp.int32(scoring.match)
+    mis = jnp.int32(scoring.mismatch)
+    open_ = jnp.int32(scoring.gap_open)
+    ext = jnp.int32(scoring.gap_extend)
+    first = open_ + ext
+    k_idx = jnp.arange(K, dtype=jnp.int32)
+    neg_col = jnp.full((B, 1), NEG, jnp.int32)
+
+    # Window padded so every row's K-wide slice is in bounds; the -1
+    # sentinel can never equal a base code (masked cells anyway).
+    pad = jnp.full((B, band + 1), -1, jnp.int32)
+    win_pad = jnp.concatenate([pad, refwin.astype(jnp.int32), pad], axis=1)
+
+    j0 = c - band + k_idx
+    h0 = jnp.broadcast_to(
+        jnp.where((j0 >= 0) & (j0 <= W), 0, NEG)[None, :], (B, K)
+    ).astype(jnp.int32)
+    e0 = jnp.full((B, K), NEG, jnp.int32)
+
+    def row(carry, x):
+        h_prev, e_prev = carry
+        read_col, i = x
+        jcol = (i + 1 + c - band) + k_idx            # row i+1 frame columns
+        valid = ((jcol >= 0) & (jcol <= W))[None, :]
+        h_up = jnp.concatenate([h_prev[:, 1:], neg_col], -1)
+        e_up = jnp.concatenate([e_prev[:, 1:], neg_col], -1)
+        e = jnp.maximum(h_up - first, e_up - ext)
+        wrow = jax.lax.dynamic_slice_in_dim(win_pad, i + c + 1, K, axis=1)
+        sub = jnp.where(read_col[:, None] == wrow, match, -mis)
+        h_tmp = jnp.maximum(h_prev + sub, e)
+        col0 = -(open_ + ext * (i + 1))
+        h_tmp = jnp.where(jcol[None, :] == 0, col0, h_tmp)
+        h_tmp = jnp.where(valid, h_tmp, NEG)
+        g = h_tmp + ext * k_idx[None, :]
+        gmax = jax.lax.cummax(g, axis=1)
+        f = jnp.concatenate([neg_col, gmax[:, :-1]], -1) \
+            - open_ - ext * k_idx[None, :]
+        h = jnp.maximum(h_tmp, f)
+        h = jnp.where(valid, h, NEG)
+        return (h, e), None
+
+    (h_last, _), _ = jax.lax.scan(
+        row, (h0, e0),
+        (read.T.astype(jnp.int32), jnp.arange(R, dtype=jnp.int32)))
+    score = jnp.max(h_last, axis=-1)
+    k_best = jnp.argmax(h_last, axis=-1).astype(jnp.int32)
+    return DPResult(score=score, ref_end=R + c - band + k_best)
+
+
+def _gotoh_banded_masked(
+    read: jnp.ndarray,
+    refwin: jnp.ndarray,
+    band: int | None,
+    scoring: Scoring = Scoring(),
+) -> DPResult:
+    """Masked full-width banded Gotoh: the independent O(R*W) reference
+    the moving-frame arithmetic of `gotoh_semiglobal_banded` (and the
+    kernels' `dp_block`) is pinned against in tests."""
+    B, R = read.shape
+    W = refwin.shape[-1]
+    if band is None or band >= W:
+        return gotoh_semiglobal(read, refwin, scoring)
+    c = band_center(R, W)
+    match = jnp.int32(scoring.match)
+    mis = jnp.int32(scoring.mismatch)
+    open_ = jnp.int32(scoring.gap_open)
+    ext = jnp.int32(scoring.gap_extend)
+    first = open_ + ext
+
+    j_idx = jnp.arange(W + 1, dtype=jnp.int32)
+
+    def in_band(i):
+        return jnp.abs(j_idx - i - c) <= band  # (W+1,) row-i cell mask
+
+    h0 = jnp.where(in_band(0)[None, :], 0, NEG)
+    h0 = jnp.broadcast_to(h0, (B, W + 1)).astype(jnp.int32)
+    e0 = jnp.full((B, W + 1), NEG, jnp.int32)
+
+    def row(carry, read_col):
+        h_prev, e_prev, i = carry
+        m = in_band(i)[None, :]
+        e = jnp.maximum(h_prev - first, e_prev - ext)
+        sub = jnp.where(read_col[:, None] == refwin, match, -mis)
+        diag = h_prev[:, :-1] + sub
+        h_tmp = jnp.maximum(diag, e[:, 1:])
+        col0 = -(open_ + ext * i)
+        h_tmp = jnp.concatenate([jnp.full((B, 1), col0, jnp.int32), h_tmp], -1)
+        # Out-of-band cells must be dead *before* the horizontal prefix:
+        # a just-off-band H value reachable by a vertical move would
+        # otherwise leak into in-band F cells the moving-frame kernels
+        # never materialize.
+        h_tmp = jnp.where(m, h_tmp, NEG)
+        g = h_tmp + ext * j_idx[None, :]
+        gmax = jax.lax.cummax(g, axis=1)
+        f = jnp.concatenate(
+            [jnp.full((B, 1), NEG, jnp.int32), gmax[:, :-1]], -1
+        ) - open_ - ext * j_idx[None, :]
+        h = jnp.maximum(h_tmp, f)
+        h = jnp.where(m, h, NEG)
+        e = jnp.where(m, e, NEG)
+        return (h, e, i + 1), None
+
+    (h_last, _, _), _ = jax.lax.scan(
+        row, (h0, e0, jnp.int32(1)), read.T
     )
     score = jnp.max(h_last, axis=-1)
     ref_end = jnp.argmax(h_last, axis=-1).astype(jnp.int32)

@@ -33,18 +33,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.distributed import ShardedSeedMap, _local_query
-from repro.core.dp_fallback import gotoh_semiglobal
-from repro.core.encoding import (
-    BASES_PER_WORD,
-    gather_windows_packed,
-    unpack_2bit,
-)
-from repro.core.light_align import gather_ref_windows
+from repro.core.encoding import BASES_PER_WORD, unpack_2bit
 from repro.kernels.candidate_align.ops import candidate_pair_align
 from repro.kernels.pair_frontend.ops import frontend_merge_filter
 from repro.core.pipeline import (
     M_DP, M_DP_OVERFLOW, M_LIGHT, M_RESIDUAL_FULL, M_UNMAPPED, MapResult,
-    PipelineConfig,
+    PipelineConfig, _residual_dp_stage,
 )
 from repro.core.seeding import seed_offsets_tuple, seed_read_batch
 from repro.core.seedmap import INVALID_LOC, SeedMapConfig
@@ -156,43 +150,20 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
         light_ok = passed & pair.ok1 & pair.ok2
         cig1, cig2 = pair.cigar1, pair.cigar2
 
-        # fixed-capacity DP residual
-        needs_dp = passed & ~light_ok
-        cap = max(1, int(round(B * cfg.residual_capacity_frac)))
-        order = jnp.argsort(~needs_dp, stable=True)
-        dp_idx = order[:cap]
-        dp_take = needs_dp[dp_idx]
-        if packed:
-            safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
-                              b_pos1[dp_idx] - cfg.dp_pad, 0)
-            safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
-                              b_pos2[dp_idx] - cfg.dp_pad, 0)
-            win1 = gather_windows_packed(ref_words, safe1,
-                                         R + 2 * cfg.dp_pad)
-            win2 = gather_windows_packed(ref_words, safe2,
-                                         R + 2 * cfg.dp_pad)
-        else:
-            safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
-                              b_pos1[dp_idx], 0)
-            safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
-                              b_pos2[dp_idx], 0)
-            win1 = gather_ref_windows(la_ref, safe1, R, cfg.dp_pad)
-            win2 = gather_ref_windows(la_ref, safe2, R, cfg.dp_pad)
-        dp1 = gotoh_semiglobal(reads1[dp_idx], win1, cfg.scoring)
-        dp2 = gotoh_semiglobal(reads2_fwd[dp_idx], win2, cfg.scoring)
+        # fixed-capacity DP residual: the same fused single-mate-aware
+        # banded `residual_dp` stage as map_pairs_impl, bit-for-bit.
+        dp_sc1, dp_sc2, dp_done, dp_overflow, dp_m1, dp_m2 = \
+            _residual_dp_stage(
+                ref_words if packed else la_ref, reads1, reads2_fwd, pair,
+                passed, light_ok, cfg, packed)
         neg = -(1 << 20)
-        dp_sc1 = jnp.full((B,), neg, jnp.int32).at[dp_idx].set(
-            jnp.where(dp_take, dp1.score, neg))
-        dp_sc2 = jnp.full((B,), neg, jnp.int32).at[dp_idx].set(
-            jnp.where(dp_take, dp2.score, neg))
-        dp_done = jnp.zeros((B,), bool).at[dp_idx].set(dp_take)
 
         method = jnp.full((B,), M_UNMAPPED, jnp.int32)
         method = jnp.where(~had_hits | (had_hits & ~passed),
                            M_RESIDUAL_FULL, method)
         method = jnp.where(light_ok, M_LIGHT, method)
         method = jnp.where(dp_done, M_DP, method)
-        method = jnp.where(needs_dp & ~dp_done, M_DP_OVERFLOW, method)
+        method = jnp.where(dp_overflow, M_DP_OVERFLOW, method)
         mapped = light_ok | dp_done
         return MapResult(
             pos1=jnp.where(mapped, b_pos1, INVALID_LOC),
@@ -203,6 +174,7 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
                              jnp.where(dp_done, dp_sc2, neg)),
             method=method, cigar1=cig1, cigar2=cig2,
             had_hits=had_hits, passed_adjacency=passed, light_ok=light_ok,
+            dp_mate1=dp_m1, dp_mate2=dp_m2,
             n_valid=jnp.ones((B,), bool),
         )
 

@@ -19,24 +19,29 @@ backend layer, `repro/kernels/backend.py`):
   3. Paired-Adjacency Filtering (repro.core.pair_filter)
                                                    -> kernels/pair_frontend
   4. Light Alignment       (repro.core.light_align)-> kernels/candidate_align
-  +  DP fallback           (repro.core.dp_fallback) for residual pairs
-                                                   (kernels/banded_sw is the
-                                                    standalone DP family)
+  5. DP fallback           (repro.core.dp_fallback) for residual pairs
+                                                   -> kernels/residual_dp
 
 Steps 1-3 are one fused `pair_frontend` op under
 ``cfg.frontend_backend`` (the core modules are its bit-exact jnp
 oracle); step 4 plus the best-pair reduction is one fused
-`candidate_align` op under ``cfg.light_backend``.  The standalone
-`kernels/xxhash` and `kernels/seed_gather` families are the front end's
-building blocks (hashing unit, NMSL row gather) kept callable on their
-own.
+`candidate_align` op under ``cfg.light_backend``; step 5 — the banded,
+single-mate-aware Gotoh fallback over the compacted residual buffer — is
+one fused `residual_dp` op under ``cfg.residual_backend`` (only the mate
+whose Light Alignment failed is re-aligned; the passing mate keeps its
+light score).  The standalone `kernels/xxhash`, `kernels/seed_gather`
+and `kernels/banded_sw` families are building blocks (hashing unit, NMSL
+row gather, the shared `dp_block` Gotoh recurrence) kept callable on
+their own.
 
 The whole pipeline is one jit-able function over fixed-shape batches.
 Residual pairs are routed through a **fixed-capacity DP buffer**: the batch
-is compacted so only `residual_capacity_frac * B` DP alignments are
-computed — the SPMD analogue of provisioning GenDP for the average fallback
+is compacted so only `residual_capacity_frac * B` residual rows reach the
+DP stage — the SPMD analogue of provisioning GenDP for the average fallback
 rate (§7.4).  Overflowing pairs are flagged (hardware backpressure) rather
-than silently dropped.
+than silently dropped.  ``residual_capacity_frac=0`` statically removes
+the whole DP stage (no gather, no DP traced) and routes every residual
+row to ``M_DP_OVERFLOW``.
 
 Method codes (MapResult.method):
   0 UNMAPPED          no candidate and no DP capacity spent
@@ -55,9 +60,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import warn_deprecated
-from repro.core.encoding import gather_windows_packed, pack_2bit
-from repro.core.light_align import gather_ref_windows
-from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.encoding import pack_2bit
+from repro.core.dp_fallback import NEG
 from repro.core.pair_filter import CandidateSet, paired_adjacency_filter
 from repro.core.query import padded_rows_device, query_read_batch
 from repro.core.scoring import Scoring
@@ -80,7 +84,17 @@ class PipelineConfig:
     dp_pad: int = 16              # DP fallback window halo
     light_mode: str = "minsplit"  # "paper" for the paper-faithful mechanism
     accept_threshold: int | None = None  # default: perfect - 24
+    # Fraction of the batch the fixed-capacity residual DP buffer holds
+    # (rows).  0 statically removes the DP stage: nothing is gathered or
+    # traced, and every residual row reports M_DP_OVERFLOW.
     residual_capacity_frac: float = 0.25
+    # Half-width of the residual DP band around the window's center
+    # diagonal (`dp_fallback.band_center`; = dp_pad for the pipeline's
+    # windows).  None derives `dp_pad + max_gap`: wide enough for any
+    # alignment start inside the window plus max_gap of drift, at
+    # (2*band+1)/(R+2*dp_pad) of the full DP's row work.  Any value
+    # >= read_len + 2*dp_pad recovers the exact unbanded DP.
+    dp_band: int | None = None
     scoring: Scoring = Scoring()
     # §Perf (genpair iteration G2, beyond-paper): rank candidate pairs by
     # their summed zero-shift Hamming distance (one XOR-compare per
@@ -91,6 +105,11 @@ class PipelineConfig:
     # Backend for the fused candidate light-alignment op ("auto" resolves
     # to the Pallas kernel on TPU, the bit-exact jnp oracle elsewhere).
     light_backend: str = "auto"
+    # Backend for the fused residual DP fallback (step 5: compacted
+    # window gather + banded Gotoh of the failed mates as one
+    # `residual_dp` op).  Same resolution rules; the staged
+    # gather + `gotoh_semiglobal_banded` path is the "jnp" oracle.
+    residual_backend: str = "auto"
     # Backend for the fused front end (steps 1-3: seeding + SeedMap query
     # + Paired-Adjacency filter as one `pair_frontend` op).  Same
     # resolution rules; the staged seeding/query/pair_filter modules are
@@ -117,6 +136,23 @@ class PipelineConfig:
         """Resolve the tri-state packed_ref against an entry point default."""
         return default if self.packed_ref is None else self.packed_ref
 
+    def band(self) -> int:
+        """Resolved residual-DP band half-width (`dp_band` or derived)."""
+        if self.dp_band is not None:
+            return self.dp_band
+        return self.dp_pad + self.max_gap
+
+    def residual_cap(self, batch: int) -> int:
+        """Residual DP buffer row capacity for a ``batch``-row step.
+
+        ``residual_capacity_frac=0`` means capacity 0 — the caller must
+        statically skip the DP stage; any positive fraction provisions at
+        least one row.
+        """
+        if self.residual_capacity_frac <= 0:
+            return 0
+        return max(1, int(round(batch * self.residual_capacity_frac)))
+
 
 jax.tree_util.register_static(PipelineConfig)
 
@@ -132,6 +168,12 @@ class MapResult(NamedTuple):
     had_hits: jnp.ndarray        # (B,) bool both reads had SeedMap hits
     passed_adjacency: jnp.ndarray  # (B,) bool >=1 candidate survived Δ filter
     light_ok: jnp.ndarray          # (B,) bool light alignment accepted
+    # (B,) bool per mate: this mate was re-aligned by the DP fallback
+    # (its Light Alignment failed and the row won a residual-buffer
+    # slot).  The single-mate-aware DP's work ledger: an M_DP row with
+    # only one flag set reused the other mate's light score.
+    dp_mate1: jnp.ndarray
+    dp_mate2: jnp.ndarray
     # (B,) bool: row is a real pair (False for the rows `map_stream` pads a
     # ragged tail batch with).  Full-batch paths emit all-True.
     n_valid: jnp.ndarray
@@ -157,6 +199,10 @@ def stage_stat_counts(res: MapResult) -> dict:
         "dp_mapped": c(res.method == M_DP),
         "dp_overflow": c(res.method == M_DP_OVERFLOW),
         "residual_full_dp": c(res.method == M_RESIDUAL_FULL),
+        # DP alignments actually run (<= 2 per DP row): the single-mate-
+        # aware fallback's work ledger — (dp_mapped * 2 -
+        # dp_mate_alignments) mates reused their light score.
+        "dp_mate_alignments": c(res.dp_mate1) + c(res.dp_mate2),
         "n_pairs": jnp.sum(v.astype(jnp.int32)),
     }
 
@@ -204,6 +250,66 @@ def _best_candidate_light(
 class _Seeded(NamedTuple):
     q1_starts: jnp.ndarray
     q2_starts: jnp.ndarray
+
+
+def _residual_dp_stage(ref, reads1, reads2_fwd, pair, passed, light_ok,
+                       cfg: PipelineConfig, packed: bool):
+    """Step 5: the fixed-capacity, single-mate-aware banded DP fallback.
+
+    One fused `residual_dp` call over the compacted residual rows
+    replaces the staged window gather + double unbanded `gotoh_semiglobal`
+    of the pre-fusion pipeline: the reference windows stream through the
+    kernel (no ``(cap, R+2*dp_pad)`` tensors in HBM), the Gotoh scan is
+    banded (``cfg.band()``), and only the mates whose Light Alignment
+    failed are re-aligned — the passing mate of a residual row keeps its
+    light score.  Shared bit-for-bit by `map_pairs_impl` and the mesh
+    serve step (`core.genpairx_step`).
+
+    ``ref`` is whatever flavor the caller resolved (uint8 bases, or the
+    2-bit packed uint32 words with ``packed=True``).  Returns
+    ``(score1, score2, dp_done, dp_overflow, dp_mate1, dp_mate2)``, all
+    ``(B,)``: scores are the assembled per-row fallback scores (light
+    score for passing mates, DP score for re-aligned ones; NEG
+    elsewhere).
+
+    With ``cfg.residual_capacity_frac=0`` the stage is statically absent:
+    nothing is gathered, no DP launch is traced, and every ``needs_dp``
+    row reports overflow.
+    """
+    # Imported at call time for the same core-package circularity reason
+    # as the other kernel families.
+    from repro.kernels.residual_dp.ops import residual_pair_dp
+
+    B = passed.shape[0]
+    needs_dp = passed & ~light_ok
+    cap = cfg.residual_cap(B)
+    zeros = jnp.zeros((B,), bool)
+    if cap == 0:
+        neg = jnp.full((B,), NEG, jnp.int32)
+        return neg, neg, zeros, needs_dp, zeros, zeros
+
+    order = jnp.argsort(~needs_dp, stable=True)
+    dp_idx = order[:cap]
+    dp_take = needs_dp[dp_idx]
+    need1 = dp_take & ~pair.ok1[dp_idx]
+    need2 = dp_take & ~pair.ok2[dp_idx]
+    dp = residual_pair_dp(
+        ref, reads1[dp_idx], reads2_fwd[dp_idx],
+        pair.pos1[dp_idx], pair.pos2[dp_idx], need1, need2,
+        cfg.dp_pad, band=cfg.band(), scoring=cfg.scoring,
+        packed_ref=packed, backend=cfg.residual_backend)
+    # The passing mate of a re-aligned row reuses its light score.
+    sc1 = jnp.where(need1, dp.score1, pair.score1[dp_idx])
+    sc2 = jnp.where(need2, dp.score2, pair.score2[dp_idx])
+    dp_sc1 = jnp.full((B,), NEG, jnp.int32).at[dp_idx].set(
+        jnp.where(dp_take, sc1, NEG))
+    dp_sc2 = jnp.full((B,), NEG, jnp.int32).at[dp_idx].set(
+        jnp.where(dp_take, sc2, NEG))
+    dp_done = zeros.at[dp_idx].set(dp_take)
+    dp_overflow = needs_dp & ~dp_done
+    dp_mate1 = zeros.at[dp_idx].set(need1)
+    dp_mate2 = zeros.at[dp_idx].set(need2)
+    return dp_sc1, dp_sc2, dp_done, dp_overflow, dp_mate1, dp_mate2
 
 
 def map_pairs_impl(
@@ -283,34 +389,12 @@ def map_pairs_impl(
     light_ok = passed & pair.ok1 & pair.ok2
     cig1, cig2 = pair.cigar1, pair.cigar2
 
-    # -- DP fallback on the fixed-capacity residual buffer ---------------
-    needs_dp = passed & ~light_ok
-    cap = max(1, int(round(B * cfg.residual_capacity_frac)))
-    order = jnp.argsort(~needs_dp, stable=True)
-    dp_idx = order[:cap]
-    dp_take = needs_dp[dp_idx]
-    if packed:
-        safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC,
-                          b_pos1[dp_idx] - cfg.dp_pad, 0)
-        safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC,
-                          b_pos2[dp_idx] - cfg.dp_pad, 0)
-        win1 = gather_windows_packed(ref_words, safe1, R + 2 * cfg.dp_pad)
-        win2 = gather_windows_packed(ref_words, safe2, R + 2 * cfg.dp_pad)
-    else:
-        safe1 = jnp.where(b_pos1[dp_idx] != INVALID_LOC, b_pos1[dp_idx], 0)
-        safe2 = jnp.where(b_pos2[dp_idx] != INVALID_LOC, b_pos2[dp_idx], 0)
-        win1 = gather_ref_windows(ref, safe1, R, cfg.dp_pad)
-        win2 = gather_ref_windows(ref, safe2, R, cfg.dp_pad)
-    dp1 = gotoh_semiglobal(reads1[dp_idx], win1, cfg.scoring)
-    dp2 = gotoh_semiglobal(reads2_fwd[dp_idx], win2, cfg.scoring)
-    dp_sc1 = jnp.full((B,), -(1 << 20), jnp.int32).at[dp_idx].set(
-        jnp.where(dp_take, dp1.score, -(1 << 20))
-    )
-    dp_sc2 = jnp.full((B,), -(1 << 20), jnp.int32).at[dp_idx].set(
-        jnp.where(dp_take, dp2.score, -(1 << 20))
-    )
-    dp_done = jnp.zeros((B,), bool).at[dp_idx].set(dp_take)
-    dp_overflow = needs_dp & ~dp_done
+    # -- 5. DP fallback on the fixed-capacity residual buffer ------------
+    # One fused `residual_dp` op (cfg.residual_backend): compacted window
+    # gather + banded Gotoh of exactly the failed mates.
+    dp_sc1, dp_sc2, dp_done, dp_overflow, dp_m1, dp_m2 = _residual_dp_stage(
+        ref_words if packed else ref, reads1, reads2_fwd, pair, passed,
+        light_ok, cfg, packed)
 
     # -- assemble ---------------------------------------------------------
     method = jnp.full((B,), M_UNMAPPED, jnp.int32)
@@ -323,13 +407,14 @@ def map_pairs_impl(
     mapped = light_ok | dp_done
     pos1 = jnp.where(mapped, b_pos1, INVALID_LOC)
     pos2 = jnp.where(mapped, b_pos2, INVALID_LOC)
-    score1 = jnp.where(light_ok, b_sc1, jnp.where(dp_done, dp_sc1, -(1 << 20)))
-    score2 = jnp.where(light_ok, b_sc2, jnp.where(dp_done, dp_sc2, -(1 << 20)))
+    score1 = jnp.where(light_ok, b_sc1, jnp.where(dp_done, dp_sc1, NEG))
+    score2 = jnp.where(light_ok, b_sc2, jnp.where(dp_done, dp_sc2, NEG))
 
     return MapResult(
         pos1=pos1, pos2=pos2, score1=score1, score2=score2, method=method,
         cigar1=cig1, cigar2=cig2, had_hits=had_hits, passed_adjacency=passed,
-        light_ok=light_ok, n_valid=jnp.ones((B,), bool),
+        light_ok=light_ok, dp_mate1=dp_m1, dp_mate2=dp_m2,
+        n_valid=jnp.ones((B,), bool),
     )
 
 

@@ -67,15 +67,17 @@ def resolved_pipeline(
 ) -> PipelineConfig:
     """Resolve every deferred `PipelineConfig` knob to a concrete value.
 
-    Returns a config whose ``light_backend`` / ``frontend_backend`` are
-    concrete backend names (env override and auto rule applied now, not
-    per trace) and whose ``packed_ref`` is a concrete bool.
+    Returns a config whose ``light_backend`` / ``frontend_backend`` /
+    ``residual_backend`` are concrete backend names (env override and
+    auto rule applied now, not per trace) and whose ``packed_ref`` is a
+    concrete bool.
     ``packed_default`` overrides the plan-derived tri-state default (the
     dry-run resolves serve-flavored configs without an ExecutionConfig).
     """
     exec_cfg = exec_cfg or ExecutionConfig()
     light = exec_cfg.backend or pipe_cfg.light_backend
     frontend = exec_cfg.backend or pipe_cfg.frontend_backend
+    residual = exec_cfg.backend or pipe_cfg.residual_backend
     packed = exec_cfg.packed_ref
     if packed is None:
         if packed_default is None:
@@ -85,5 +87,6 @@ def resolved_pipeline(
         pipe_cfg,
         light_backend=resolve_backend(light, family="candidate_align"),
         frontend_backend=resolve_backend(frontend, family="pair_frontend"),
+        residual_backend=resolve_backend(residual, family="residual_dp"),
         packed_ref=bool(packed),
     )

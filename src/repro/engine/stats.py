@@ -14,7 +14,8 @@ import jax.numpy as jnp
 #: accumulated keys: the Fig. 10 stage counts plus the valid-pair total
 STAT_KEYS = (
     "no_seed_hit", "adjacency_fail", "light_align_fail", "light_mapped",
-    "dp_mapped", "dp_overflow", "residual_full_dp", "n_pairs",
+    "dp_mapped", "dp_overflow", "residual_full_dp", "dp_mate_alignments",
+    "n_pairs",
 )
 
 

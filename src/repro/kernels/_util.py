@@ -2,11 +2,38 @@
 
 Ops whose Pallas launches carry scalar-prefetch DMA tables (SMEM) chunk
 large batches into bounded launches; the pad-and-chunk protocol is the
-same for every family, so it lives here once.
+same for every family, so it lives here once — as does the in-kernel
+2-bit window unpack every packed-ref kernel shares.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from repro.core.encoding import BASES_PER_WORD
+
+
+def unpack_window_block(raw: jnp.ndarray, off: jnp.ndarray,
+                        width: int) -> jnp.ndarray:
+    """Kernel-side 2-bit window unpack: (BLK, n_words) packed int32 words
+    + (BLK, 1) intra-word base offsets -> (BLK, width) base codes.
+
+    Unpacks every word (base i of a word occupies bits [2i, 2i+2)), then
+    cuts the per-row ``[off, off+width)`` slice with a 16-way select on
+    the offset — off varies per row, so a static slice per possible
+    offset replaces a dynamic lane gather.  Shared by the candidate_align
+    and residual_dp kernels; must keep mirroring
+    `core.encoding.gather_windows_packed` bit-for-bit.
+    """
+    BLK, n_words = raw.shape
+    codes = jnp.stack(
+        [(jax.lax.shift_right_logical(raw, 2 * o) & 3)
+         for o in range(BASES_PER_WORD)],
+        axis=-1).reshape(BLK, n_words * BASES_PER_WORD)
+    out = codes[:, 0:width]
+    for o in range(1, BASES_PER_WORD):
+        out = jnp.where(off == o, codes[:, o:o + width], out)
+    return out
 
 
 def pad_rows(x: jnp.ndarray, total: int) -> jnp.ndarray:

@@ -10,21 +10,30 @@ from repro.core.dp_fallback import DPResult
 from repro.core.scoring import Scoring
 from repro.kernels.backend import resolve_backend
 from repro.kernels.banded_sw.kernel import DEFAULT_BLOCK, banded_sw_pallas
-from repro.kernels.banded_sw.ref import gotoh_ref
+from repro.kernels.banded_sw.ref import gotoh_banded_ref
 
 
-@functools.partial(jax.jit, static_argnames=("scoring", "block", "backend"))
+@functools.partial(jax.jit,
+                   static_argnames=("scoring", "band", "block", "backend"))
 def banded_sw(
     read: jnp.ndarray,
     win: jnp.ndarray,
     scoring: Scoring = Scoring(),
+    band: int | None = None,
     block: int = DEFAULT_BLOCK,
     backend: str = "auto",
 ) -> DPResult:
-    """Batched semiglobal Gotoh with kernel/oracle backend switch."""
+    """Batched semiglobal Gotoh with kernel/oracle backend switch.
+
+    ``band`` restricts the DP to cells within ``band`` of the window's
+    center diagonal (`core.dp_fallback.band_center`); ``None`` or
+    ``band >= W`` is the exact full DP (`gotoh_semiglobal`).  The kernel
+    backends compute only the ``2*band + 1``-wide moving frame — the same
+    `dp_block` recurrence the fused `residual_dp` family runs.
+    """
     backend = resolve_backend(backend, family="banded_sw")
     if backend == "jnp":
-        return gotoh_ref(read, win, scoring)
+        return gotoh_banded_ref(read, win, band, scoring)
     B, R = read.shape
     W = win.shape[1]
     pad = (-B) % block
@@ -34,5 +43,6 @@ def banded_sw(
         r32 = jnp.concatenate([r32, jnp.zeros((pad, R), jnp.int32)], 0)
         w32 = jnp.concatenate([w32, jnp.zeros((pad, W), jnp.int32)], 0)
     score, end = banded_sw_pallas(
-        r32, w32, scoring, block, interpret=(backend == "interpret"))
+        r32, w32, scoring, block, interpret=(backend == "interpret"),
+        band=band)
     return DPResult(score=score[:B], ref_end=end[:B])

@@ -1,2 +1,5 @@
 """Pure-jnp oracle for the banded_sw kernel (delegates to core)."""
-from repro.core.dp_fallback import gotoh_semiglobal as gotoh_ref  # noqa: F401
+from repro.core.dp_fallback import (  # noqa: F401
+    gotoh_semiglobal as gotoh_ref,
+    gotoh_semiglobal_banded as gotoh_banded_ref,
+)

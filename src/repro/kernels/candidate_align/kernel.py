@@ -71,8 +71,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.encoding import BASES_PER_WORD
 from repro.core.scoring import Scoring
+from repro.kernels._util import unpack_window_block
 from repro.kernels.light_align.kernel import align_block
 
 DEFAULT_BLOCK = 16     # batch rows per grid step (C candidates x 2 mates each)
@@ -157,19 +157,8 @@ def _candidate_align_kernel(
         raw = win[bank, c]                             # (BLK, win_elems)
         if not packed:
             return raw
-        # Unpack 2-bit words (base i of a word occupies bits [2i, 2i+2)),
-        # then cut the per-row [off, off+W) slice with a 16-way select on
-        # the intra-word offset — off varies per row, so a static slice
-        # per possible offset replaces a dynamic lane gather.
-        codes = jnp.stack(
-            [(jax.lax.shift_right_logical(raw, 2 * o) & 3)
-             for o in range(BASES_PER_WORD)],
-            axis=-1).reshape(BLK, win_elems * BASES_PER_WORD)
-        off = off_ref[:, c:c + 1]                      # (BLK, 1)
-        out = codes[:, 0:W]
-        for o in range(1, BASES_PER_WORD):
-            out = jnp.where(off == o, codes[:, o:o + W], out)
-        return out
+        # Shared 2-bit unpack + per-row offset cut (kernels/_util.py).
+        return unpack_window_block(raw, off_ref[:, c:c + 1], W)
 
     reads1 = reads1_ref[...]
     reads2 = reads2_ref[...]

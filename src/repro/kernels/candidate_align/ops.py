@@ -94,18 +94,24 @@ def candidate_pair_align(
             [words, jnp.broadcast_to(words[-1:], (n_words,))])
         win_elems = n_words
     else:
-        # Edge-pad with the boundary bases so a contiguous window DMA at
-        # `pos` reproduces gather_ref_windows' per-element index clamp.
+        # Edge-pad a full window width of boundary bases on each side so
+        # a contiguous DMA reproduces gather_ref_windows' per-element
+        # index clamp for EVERY int32 start — including the negative
+        # starts merge_read_starts emits for reads near the reference
+        # origin (start = location - seed_offset) and starts past L.
+        # Starts are clamped only to the range where the oracle's window
+        # saturates to all-ref[0] / all-ref[L-1] anyway.
         L = ref.shape[0]
         r32 = ref.astype(jnp.int32)
         ref_arr = jnp.concatenate([
-            jnp.broadcast_to(r32[:1], (E,)), r32,
-            jnp.broadcast_to(r32[-1:], (R + E,)),
+            jnp.broadcast_to(r32[:1], (W,)), r32,
+            jnp.broadcast_to(r32[-1:], (W - 1,)),
         ])
 
         def prep(pos, valid):
-            s = jnp.clip(jnp.where(valid, pos, 0), 0, L - 1)
-            return s.astype(jnp.int32), jnp.zeros_like(s, jnp.int32)
+            s = jnp.clip(jnp.where(valid, pos, 0), E - W, L - 1 + E)
+            return (s + (W - E)).astype(jnp.int32), \
+                jnp.zeros_like(s, jnp.int32)
 
         sdma1, off1 = prep(pos1, valid1)
         sdma2, off2 = prep(pos2, valid2)

@@ -1,0 +1,8 @@
+"""Fused residual-pair DP fallback (step 5): the GenDP analogue, fused."""
+from repro.kernels.residual_dp.ops import residual_pair_dp
+from repro.kernels.residual_dp.ref import (
+    ResidualDPResult,
+    residual_pair_dp_ref,
+)
+
+__all__ = ["residual_pair_dp", "residual_pair_dp_ref", "ResidualDPResult"]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for the fused residual-DP op.
+
+This is the *staged* step-5 path exactly as `core/pipeline.py` wrote it
+out before the fusion, made banded and single-mate-aware: materialize the
+``(N, R + 2*dp_pad)`` reference windows of both mates in HBM
+(`gather_ref_windows` / `gather_windows_packed`, the two flavors
+preserved verbatim from the pipeline), run the banded Gotoh oracle
+(`gotoh_semiglobal_banded`) over every lane, and mask the mates whose
+Light Alignment already succeeded to the ``NEG`` sentinel.  The Pallas
+kernel (`kernel.py`) must match this bit-for-bit on every needed mate —
+it differs only in *how much work it does*: windows stream through VMEM
+(no ``(N, W)`` tensors in HBM), only the ``2*band + 1`` frame of each DP
+matrix is computed, and only the compacted failed-mate items run at all.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.dp_fallback import NEG, gotoh_semiglobal_banded
+from repro.core.encoding import gather_windows_packed
+from repro.core.light_align import gather_ref_windows
+from repro.core.scoring import Scoring
+from repro.core.seedmap import INVALID_LOC
+
+
+class ResidualDPResult(NamedTuple):
+    """Per-row DP fallback scores for a compacted residual batch.
+
+    ``score{1,2}`` / ``ref_end{1,2}`` are defined only where the matching
+    ``need`` mask was True (the mate's Light Alignment failed); other
+    lanes hold the ``NEG`` / 0 sentinels.  ``dp_lanes`` is instrumentation:
+    the number of DP alignments the op actually ran — on the jnp oracle
+    the failed-mate count, on the kernel backends the runtime-executed
+    lane count (equal to the failed-mate count at ``block=1``,
+    block-granular otherwise).  It is *not* part of the bit-exactness
+    contract.
+    """
+
+    score1: jnp.ndarray   # (N,) int32, NEG where ~need1
+    ref_end1: jnp.ndarray  # (N,) int32, 0 where ~need1
+    score2: jnp.ndarray
+    ref_end2: jnp.ndarray
+    dp_lanes: jnp.ndarray  # () int32
+
+
+def _gather(ref, pos, dp_pad, read_len, packed_ref):
+    valid = pos != INVALID_LOC
+    if packed_ref:
+        safe = jnp.where(valid, pos - dp_pad, 0)
+        return gather_windows_packed(ref, safe, read_len + 2 * dp_pad)
+    safe = jnp.where(valid, pos, 0)
+    return gather_ref_windows(ref, safe, read_len, dp_pad)
+
+
+def residual_pair_dp_ref(
+    ref: jnp.ndarray,
+    reads1: jnp.ndarray,   # (N, R) mate 1, reference orientation
+    reads2: jnp.ndarray,   # (N, R) mate 2, reference orientation
+    pos1: jnp.ndarray,     # (N,) best-candidate starts, INVALID_LOC padded
+    pos2: jnp.ndarray,
+    need1: jnp.ndarray,    # (N,) bool: mate 1 needs DP re-alignment
+    need2: jnp.ndarray,
+    dp_pad: int,
+    band: int | None = None,
+    scoring: Scoring = Scoring(),
+    packed_ref: bool = False,
+) -> ResidualDPResult:
+    R = reads1.shape[1]
+    win1 = _gather(ref, pos1, dp_pad, R, packed_ref)
+    win2 = _gather(ref, pos2, dp_pad, R, packed_ref)
+    dp1 = gotoh_semiglobal_banded(reads1, win1, band, scoring)
+    dp2 = gotoh_semiglobal_banded(reads2, win2, band, scoring)
+    return ResidualDPResult(
+        score1=jnp.where(need1, dp1.score, NEG),
+        ref_end1=jnp.where(need1, dp1.ref_end, 0),
+        score2=jnp.where(need2, dp2.score, NEG),
+        ref_end2=jnp.where(need2, dp2.ref_end, 0),
+        dp_lanes=(jnp.sum(need1.astype(jnp.int32))
+                  + jnp.sum(need2.astype(jnp.int32))),
+    )

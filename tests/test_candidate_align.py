@@ -112,6 +112,29 @@ def test_kernel_matches_oracle_prescreen_unpacked():
         _assert_same(got, want, f"prescreen={ps}")
 
 
+def test_out_of_range_candidate_starts_match_oracle():
+    """Negative candidate starts (merge_read_starts emits start =
+    location - seed_offset, negative near the reference origin) and
+    starts past L gather the same clamped windows on both backends —
+    regression for the kernel prep clamping to [0, L-1] while the
+    unpacked oracle clamps per element."""
+    rng = np.random.default_rng(33)
+    b = 4
+    ref = rng.integers(0, 4, (L,), dtype=np.uint8)
+    pos1 = np.array([[-2, -30, 0, 5],
+                     [-(R + 2 * E + 3), 7, L - 1, L + 4],
+                     [L + 300, -1, 3, 9],
+                     [2, 4, 6, 8]], np.int32)
+    pos2 = pos1[:, ::-1].copy()
+    reads1 = rng.integers(0, 4, (b, R), dtype=np.uint8)
+    reads2 = rng.integers(0, 4, (b, R), dtype=np.uint8)
+    args = (jnp.asarray(ref), jnp.asarray(reads1), jnp.asarray(reads2),
+            jnp.asarray(pos1), jnp.asarray(pos2), E)
+    got = candidate_pair_align(*args, backend="interpret", block=4)
+    want = candidate_pair_align(*args, backend="jnp")
+    _assert_same(got, want, "out-of-range starts")
+
+
 @pytest.mark.parametrize("backend", ["jnp", "interpret"])
 def test_invalid_candidates_masked(backend):
     """Fully padded rows: masked scores, not ok, and slot 0 wins."""

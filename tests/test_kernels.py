@@ -4,7 +4,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.dp_fallback import gotoh_semiglobal
+from repro.core.dp_fallback import gotoh_semiglobal, gotoh_semiglobal_banded
 from repro.core.light_align import light_align as light_align_jnp
 from repro.core.scoring import Scoring
 from repro.kernels.banded_sw.ops import banded_sw
@@ -87,6 +87,36 @@ def test_banded_sw_kernel_sweep(b, r, w):
     read = jnp.asarray(rng.integers(0, 4, (b, r), np.uint8))
     win = jnp.asarray(rng.integers(0, 4, (b, w), np.uint8))
     got = banded_sw(read, win, backend="interpret", block=8)
+    ref = gotoh_semiglobal(read.astype(jnp.int32), win.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got.score), np.asarray(ref.score))
+    np.testing.assert_array_equal(np.asarray(got.ref_end),
+                                  np.asarray(ref.ref_end))
+
+
+@pytest.mark.parametrize("b,r,w", [(8, 150, 182), (64, 50, 80), (5, 40, 56)])
+@pytest.mark.parametrize("band", [2, 8, 24])
+def test_banded_sw_kernel_banded_matches_oracle(b, r, w, band):
+    """The moving-frame banded kernel == the masked jnp oracle, including
+    odd W-R centers and bands wider than the window slack."""
+    rng = np.random.default_rng(b * 100 + w + band)
+    read = jnp.asarray(rng.integers(0, 4, (b, r), np.uint8))
+    win = jnp.asarray(rng.integers(0, 4, (b, w), np.uint8))
+    got = banded_sw(read, win, band=band, backend="interpret", block=1)
+    ref = gotoh_semiglobal_banded(read.astype(jnp.int32),
+                                  win.astype(jnp.int32), band)
+    np.testing.assert_array_equal(np.asarray(got.score), np.asarray(ref.score))
+    np.testing.assert_array_equal(np.asarray(got.ref_end),
+                                  np.asarray(ref.ref_end))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_banded_sw_band_ge_w_recovers_full_dp(backend):
+    """The exactness contract: band >= W is bit-identical to the
+    unbanded gotoh_semiglobal."""
+    rng = np.random.default_rng(44)
+    read = jnp.asarray(rng.integers(0, 4, (16, 100), np.uint8))
+    win = jnp.asarray(rng.integers(0, 4, (16, 132), np.uint8))
+    got = banded_sw(read, win, band=132, backend=backend, block=8)
     ref = gotoh_semiglobal(read.astype(jnp.int32), win.astype(jnp.int32))
     np.testing.assert_array_equal(np.asarray(got.score), np.asarray(ref.score))
     np.testing.assert_array_equal(np.asarray(got.ref_end),

@@ -20,6 +20,9 @@
       derivation and a padded-row query equals the CSR query at the same
       cap — the contract that lets the engine swap index layouts without
       changing `Mapper.map` results.
+  P9  banded Gotoh == the full-DP numpy traceback oracle whenever the
+      true alignment's diagonal (and every profitable detour from it)
+      lies within the band, and is never above the full DP score.
 """
 import jax
 import jax.numpy as jnp
@@ -260,6 +263,51 @@ def test_p7_frontend_merge_filter_matches_naive(seed, delta, cap):
         assert int(fe.n[0]) == n
         assert int(fe.n_hits1[0]) == n1
         assert int(fe.n_hits2[0]) == n2
+
+
+@st.composite
+def banded_case(draw, R=80, p=16):
+    """A read planted at window offset s with a few subs + one small
+    deletion, and a band provably wide enough for the optimal path.
+
+    Any path deviating D diagonals from the planted one pays at least a
+    12 + 2*D gap surcharge while gaining at most 10*n_subs (avoided
+    mismatches) + the planted gap cost (<= 16), so D <= 17 here; a
+    margin of 40 over |s - c| + k is therefore safe, not just likely.
+    """
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    W = R + 2 * p
+    win = rng.integers(0, 4, W, dtype=np.uint8)
+    k = draw(st.integers(0, 2))             # planted deletion run length
+    s = draw(st.integers(0, 2 * p - k))     # true alignment start column
+    if k:
+        cut = draw(st.integers(4, R - 4))
+        read = np.concatenate([win[s:s + cut], win[s + cut + k:s + R + k]])
+    else:
+        read = win[s:s + R].copy()
+    n_subs = draw(st.integers(0, 3))
+    for _ in range(n_subs):
+        q = draw(st.integers(0, R - 1))
+        read[q] = (read[q] + draw(st.integers(1, 3))) % 4
+    band = abs(s - p) + k + 40              # center c == p for this shape
+    return read.astype(np.uint8), win, band
+
+
+@given(banded_case())
+@settings(max_examples=40, deadline=None)
+def test_p9_banded_gotoh_exact_when_offset_in_band(case):
+    from repro.core.dp_fallback import gotoh_align_np, gotoh_semiglobal_banded
+
+    read, win, band = case
+    full_score, _, _ = gotoh_align_np(read, win, SC)
+    banded = gotoh_semiglobal_banded(jnp.asarray(read[None]),
+                                     jnp.asarray(win[None]), band, SC)
+    assert int(banded.score[0]) == full_score, \
+        f"banded {int(banded.score[0])} != full {full_score} (band {band})"
+    # a deliberately starved band can only lose score, never gain
+    tight = gotoh_semiglobal_banded(jnp.asarray(read[None]),
+                                    jnp.asarray(win[None]), 1, SC)
+    assert int(tight.score[0]) <= full_score
 
 
 @given(st.integers(0, 2**31), st.integers(1, 4))
