@@ -1,51 +1,76 @@
 """Long-read mapping via pseudo-pair decomposition + location voting
-(paper §4.7).
+(paper §4.7), through the engine's long-read lane.
 
 Each long read is cut into interleaved 150 bp segments; consecutive
 segments form pseudo-pairs fed through the same Partitioned Seeding /
 SeedMap Query / Paired-Adjacency Filtering stages as short pairs, then
-Location Voting picks the consensus diagonal and banded DP verifies it.
+the `location_vote` kernel picks the consensus diagonal and banded DP
+verifies the anchor segment at the winning position.
+
+The lane is a session facet: ``Mapper.build`` resolves it (backends,
+band, packed-ref flavor) alongside the pair pipeline, `map_long` is the
+synchronous call, `map_long_stream` the async serve loop.
 
   PYTHONPATH=src python examples/long_reads.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SeedMapConfig, build_seedmap, random_reference
-from repro.core.long_read import LongReadConfig, map_long_reads
-
-
-def simulate_long_reads(ref, n, length, sub_rate, rng):
-    starts = rng.integers(64, len(ref) - length - 64, size=n)
-    reads = np.stack([ref[s : s + length].copy() for s in starts])
-    errs = rng.random(reads.shape) < sub_rate
-    reads[errs] = (reads[errs] + rng.integers(1, 4, errs.sum())) % 4
-    return reads.astype(np.uint8), starts.astype(np.int32)
+from repro.core import random_reference, simulate_long_reads
+from repro.core.seedmap import SeedMapConfig
+from repro.engine import ExecutionConfig, LongReadConfig, Mapper
 
 
 def main():
     rng = np.random.default_rng(0)
-    print("== indexing reference ==")
+    print("== building the session (index + lane, resolved once) ==")
     ref = random_reference(400_000, rng)
-    sm = build_seedmap(ref, SeedMapConfig(table_bits=19))
+    cfg = LongReadConfig()
+    mapper = Mapper.build(ref, SeedMapConfig(table_bits=19),
+                          exec_cfg=ExecutionConfig(long_read=cfg))
+    print(f"  lane: vote_backend={mapper.lr_cfg.vote_backend} "
+          f"band={mapper.lr_cfg.band()} vote_bin={mapper.lr_cfg.vote_bin}")
 
     print("== mapping 32 long reads (4.5 kbp, 1% error — PacBio-like) ==")
-    reads, true_starts = simulate_long_reads(ref, 32, 4500, 0.01, rng)
-    cfg = LongReadConfig()
-    res = map_long_reads(sm, jnp.asarray(ref), jnp.asarray(reads), cfg)
+    reads, true_starts = simulate_long_reads(ref, 32, 4500, seed=1)
+    res = mapper.map_long(reads)
 
     pos = np.asarray(res.position)
     mapped = np.asarray(res.mapped)
-    err = np.abs(pos - true_starts)
-    correct = mapped & (err <= cfg.vote_bin)
+    correct = mapped & (np.abs(pos - true_starts) <= cfg.vote_bin)
+    n_seg = cfg.n_segments(reads.shape[-1])
     print(f"  mapped  : {mapped.mean():.1%}")
     print(f"  correct : {correct.sum()}/{len(reads)} "
           f"(within one {cfg.vote_bin} bp vote bin)")
     print(f"  votes   : median {int(np.median(np.asarray(res.votes)))} "
-          f"per read ({(len(reads[0]) - 150) // 300 + 1} segments each)")
+          f"per read ({n_seg} segments each)")
     for i in range(5):
         print(f"    read {i}: voted={pos[i]} true={true_starts[i]} "
               f"votes={int(res.votes[i])} dp_score={int(res.score[i])}")
+
+    print("== streaming 4 batches (ragged tail, device-side accuracy) ==")
+
+    def batches():
+        for k in range(4):
+            n = 32 if k < 3 else 20          # ragged tail: padded + masked
+            r, s = simulate_long_reads(ref, n, 4500, seed=10 + k)
+            yield r, (jnp.asarray(s),)
+
+    def accuracy(state, res, aux):
+        (true,) = aux
+        ok = res.n_valid & res.mapped & (
+            jnp.abs(res.position - true) <= cfg.vote_bin)
+        return state + ok.sum(dtype=jnp.int32)
+
+    sr = mapper.map_long_stream(
+        batches(), reduce_fn=accuracy,
+        reduce_init=jnp.zeros((), jnp.int32),
+        warmup_batch=(reads, (jnp.asarray(true_starts),)))
+    print(f"  {sr.n_pairs} reads in {sr.n_batches} batches, "
+          f"{sr.pairs_per_s:,.0f} reads/s")
+    print(f"  correct : {int(sr.reduced)}/{sr.n_pairs}")
+    print("  stage fractions:",
+          {k: round(v, 3) for k, v in sr.fractions.items()})
 
 
 if __name__ == "__main__":

@@ -26,7 +26,17 @@ from repro.core.seedmap import (
     seedmap_stats,
     to_padded,
 )
-from repro.core.simulate import ReadSimConfig, random_reference, simulate_pairs
+from repro.core.long_read import (
+    LongReadConfig,
+    LongReadResult,
+    map_long_reads,
+)
+from repro.core.simulate import (
+    ReadSimConfig,
+    random_reference,
+    simulate_long_reads,
+    simulate_pairs,
+)
 
 __all__ = [
     "encode_str", "pack_2bit", "revcomp", "unpack_2bit", "xxhash32_words",
@@ -36,5 +46,7 @@ __all__ = [
     "QueryResult", "query_csr", "query_read_batch", "Scoring",
     "SeedSet", "hash_seeds", "seed_read_batch", "INVALID_LOC", "PaddedSeedMap",
     "SeedMap", "SeedMapConfig", "build_seedmap", "seedmap_stats", "to_padded",
-    "ReadSimConfig", "random_reference", "simulate_pairs",
+    "LongReadConfig", "LongReadResult", "map_long_reads",
+    "ReadSimConfig", "random_reference", "simulate_long_reads",
+    "simulate_pairs",
 ]

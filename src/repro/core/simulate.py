@@ -73,6 +73,31 @@ def repetitive_reference(
     return out
 
 
+def simulate_long_reads(
+    ref: np.ndarray,
+    n: int,
+    length: int,
+    sub_rate: float = 0.01,
+    rng: np.random.Generator | None = None,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Substitution-only long reads in reference orientation.
+
+    Returns ``(reads, true_starts)``: (n, length) uint8 reads and their
+    (n,) int32 ground-truth reference starts — shared by the long-read
+    example, benchmark, serve workload and tests.  Long-read platforms
+    are indel-heavy in reality; the lane's vote/DP stages only need
+    per-segment seed survival, which substitutions at PacBio-HiFi-like
+    rates model adequately.
+    """
+    rng = rng or np.random.default_rng(seed)
+    starts = rng.integers(64, len(ref) - length - 64, size=n)
+    reads = np.stack([ref[s:s + length].copy() for s in starts])
+    errs = rng.random(reads.shape) < sub_rate
+    reads[errs] = (reads[errs] + rng.integers(1, 4, int(errs.sum()))) % 4
+    return reads.astype(np.uint8), starts.astype(np.int32)
+
+
 def _inject_errors(
     ref: np.ndarray, start: int, read_len: int, cfg: ReadSimConfig,
     rng: np.random.Generator,

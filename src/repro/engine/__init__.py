@@ -15,9 +15,11 @@ The pre-engine entry points — `core.pipeline.map_pairs` and the
 `core.distributed.make_*` factories — survive as thin deprecation shims
 over the same implementations (warn once, delegate).
 """
+from repro.core.long_read import LongReadConfig, LongReadResult
 from repro.core.pipeline import MapResult
 from repro.engine.config import ExecutionConfig
 from repro.engine.mapper import Mapper
 from repro.engine.stream import StreamResult
 
-__all__ = ["ExecutionConfig", "MapResult", "Mapper", "StreamResult"]
+__all__ = ["ExecutionConfig", "LongReadConfig", "LongReadResult",
+           "MapResult", "Mapper", "StreamResult"]

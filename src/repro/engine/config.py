@@ -15,6 +15,7 @@ import dataclasses
 
 from jax.sharding import Mesh
 
+from repro.core.long_read import LongReadConfig
 from repro.core.pipeline import PipelineConfig
 from repro.kernels.backend import resolve_backend
 
@@ -43,6 +44,11 @@ class ExecutionConfig:
                   build (None: resolve the tri-state against the plan's
                   default — packed for the sharded-index serve plan,
                   unpacked otherwise, the historical entry-point split).
+    long_read:    the session's long-read lane (`Mapper.map_long` /
+                  ``map_long_stream``).  None builds the lane with the
+                  default `LongReadConfig` on replicated-index plans;
+                  setting it on a ``shard_index`` plan raises (the lane
+                  has no sharded-index step yet).
     """
 
     mesh: Mesh | None = None
@@ -53,10 +59,14 @@ class ExecutionConfig:
     donate_reads: bool = True
     backend: str | None = None
     packed_ref: bool | None = None
+    long_read: LongReadConfig | None = None
 
     def __post_init__(self):
         if self.shard_index and self.mesh is None:
             raise ValueError("shard_index=True requires a mesh")
+        if self.shard_index and self.long_read is not None:
+            raise ValueError(
+                "the long-read lane is not available on shard_index plans")
 
 
 def resolved_pipeline(
@@ -90,3 +100,33 @@ def resolved_pipeline(
         residual_backend=resolve_backend(residual, family="residual_dp"),
         packed_ref=bool(packed),
     )
+
+
+def resolved_long_read(
+    pipe_cfg: PipelineConfig,
+    exec_cfg: ExecutionConfig | None = None,
+) -> LongReadConfig:
+    """Resolve the session's long-read lane config, once, at build time.
+
+    The lane's ``pipe`` resolves with the same rules as the session
+    pipeline (`resolved_pipeline` — so ``ExecutionConfig.backend`` and
+    ``REPRO_BACKEND`` govern the lane too) and its ``vote_backend``
+    through the shared backend layer (family ``location_vote``).  Two
+    knobs are forced to the session's resolved values because they are
+    coupled to session state built once: ``max_locs_per_seed`` (the
+    padded SeedMap row width) and ``packed_ref`` (the device reference
+    flavor).  ``pipe_cfg`` must already be resolved.
+    """
+    exec_cfg = exec_cfg or ExecutionConfig()
+    lr = exec_cfg.long_read or LongReadConfig()
+    lane_pipe = dataclasses.replace(
+        lr.pipe,
+        max_locs_per_seed=pipe_cfg.max_locs_per_seed,
+        packed_ref=pipe_cfg.packed_ref,
+    )
+    lane_pipe = resolved_pipeline(lane_pipe, exec_cfg,
+                                  packed_default=pipe_cfg.packed_ref)
+    vote = exec_cfg.backend or lr.vote_backend
+    return dataclasses.replace(
+        lr, pipe=lane_pipe,
+        vote_backend=resolve_backend(vote, family="location_vote"))

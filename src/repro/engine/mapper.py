@@ -28,6 +28,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.encoding import pack_2bit
+from repro.core.long_read import (
+    LongReadResult,
+    long_stage_stat_counts,
+)
 from repro.core.pipeline import (
     MapResult,
     PipelineConfig,
@@ -40,9 +44,18 @@ from repro.core.seedmap import (
     build_seedmap,
     to_padded,
 )
-from repro.engine.config import ExecutionConfig, resolved_pipeline
+from repro.engine.config import (
+    ExecutionConfig,
+    resolved_long_read,
+    resolved_pipeline,
+)
 from repro.engine import plan
-from repro.engine.stats import STAT_KEYS, fetch_stage_totals, init_stage_totals
+from repro.engine.stats import (
+    LONG_STAT_KEYS,
+    STAT_KEYS,
+    fetch_stage_totals,
+    init_stage_totals,
+)
 from repro.engine.stream import (
     StreamResult,
     pad_tail,
@@ -63,7 +76,7 @@ class Mapper:
     def __init__(self, *, state: tuple, state_shardings: tuple | None,
                  raw_step, pipe_cfg: PipelineConfig,
                  exec_cfg: ExecutionConfig, sm_config: SeedMapConfig,
-                 index):
+                 index, lr_cfg=None, raw_long_step=None):
         self._state = state          # device arrays prepended to each call
         self._state_shardings = state_shardings
         self._raw_step = raw_step    # traceable; fused into the stream step
@@ -75,6 +88,16 @@ class Mapper:
             raw_step, len(state), mesh=exec_cfg.mesh,
             state_shardings=state_shardings,
             batch_axes=exec_cfg.batch_axes)
+        # The long-read lane shares the session state; absent (None) on
+        # sharded-index plans.
+        self.lr_cfg = lr_cfg         # fully resolved LongReadConfig | None
+        self._raw_long_step = raw_long_step
+        self._long_step = None
+        if raw_long_step is not None:
+            self._long_step = plan.jit_step(
+                raw_long_step, len(state), mesh=exec_cfg.mesh,
+                state_shardings=state_shardings,
+                batch_axes=exec_cfg.batch_axes, n_batch_args=1)
         self._fused_cache: dict = {}
 
     # ------------------------------------------------------------ build --
@@ -147,9 +170,13 @@ class Mapper:
                 shardings = (repl, repl)
             state = (index, ref_arr)
             raw = plan.raw_pipeline_step(cfg)
+        lr_cfg = raw_long = None
+        if not exec_cfg.shard_index:
+            lr_cfg = resolved_long_read(cfg, exec_cfg)
+            raw_long = plan.raw_long_read_step(lr_cfg)
         return cls(state=state, state_shardings=shardings, raw_step=raw,
                    pipe_cfg=cfg, exec_cfg=exec_cfg, sm_config=sm.config,
-                   index=index)
+                   index=index, lr_cfg=lr_cfg, raw_long_step=raw_long)
 
     # ------------------------------------------------------------- run ---
     def map(self, reads1, reads2) -> MapResult:
@@ -163,42 +190,119 @@ class Mapper:
         n = jnp.int32(reads1.shape[0])
         return self._step(*self._state, reads1, reads2, n)
 
+    def map_long(self, reads) -> LongReadResult:
+        """Map one fixed-shape batch of long reads (B, L) uint8.
+
+        Reads are expected in reference orientation, exactly the
+        `core.long_read.map_long_reads` contract; results are
+        bit-identical to it under the session's resolved lane config
+        (``self.lr_cfg``).
+        """
+        if self._long_step is None:
+            raise NotImplementedError(
+                "the long-read lane is not available on shard_index "
+                "sessions; build a replicated-index Mapper for map_long")
+        reads = jnp.asarray(reads)
+        n = jnp.int32(reads.shape[0])
+        return self._long_step(*self._state, reads, n)
+
     # ---------------------------------------------------------- stream ---
-    def _fused_step(self, reduce_fn):
+    #: per-lane stream plumbing: (raw-step attr, stat counts fn, stat
+    #: keys, read arrays per batch item)
+    _LANES = {
+        "pairs": ("_raw_step", stage_stat_counts, STAT_KEYS, 2),
+        "long": ("_raw_long_step", long_stage_stat_counts,
+                 LONG_STAT_KEYS, 1),
+    }
+
+    def _fused_step(self, reduce_fn, lane: str = "pairs"):
         """One jitted dispatch per stream batch: step + totals + reduce.
 
-        ``fused(state, carry, reads1, reads2, n, aux)`` with ``carry =
+        ``fused(state, carry, *reads, n, aux)`` with ``carry =
         (stage_totals, reduce_state)`` donated — the rolling accumulators
         never round-trip the host — and the read buffers donated too
         (`ExecutionConfig.donate_reads`).
         """
-        if reduce_fn in self._fused_cache:
-            return self._fused_cache[reduce_fn]
-        raw = self._raw_step
+        if (lane, reduce_fn) in self._fused_cache:
+            return self._fused_cache[(lane, reduce_fn)]
+        raw_attr, counts_fn, keys, n_arrays = self._LANES[lane]
+        raw = getattr(self, raw_attr)
         mesh = self.exec_cfg.mesh
 
-        def fused(state, carry, reads1, reads2, n, aux):
-            res = raw(*state, reads1, reads2, n)
+        def fused(state, carry, *rest):
+            *reads, n, aux = rest
+            res = raw(*state, *reads, n)
             totals, red = carry
-            counts = stage_stat_counts(res)
-            totals = {k: totals[k] + counts[k] for k in STAT_KEYS}
+            counts = counts_fn(res)
+            totals = {k: totals[k] + counts[k] for k in keys}
             if reduce_fn is not None:
                 red = reduce_fn(red, res, aux)
             return res, (totals, red)
 
-        kwargs = {"donate_argnums": (1, 2, 3)
-                  if self.exec_cfg.donate_reads else (1,)}
+        donate = (1,) + (tuple(range(2, 2 + n_arrays))
+                         if self.exec_cfg.donate_reads else ())
+        kwargs = {"donate_argnums": donate}
         if mesh is not None:
             batch_spec = NamedSharding(mesh, P(self.exec_cfg.batch_axes))
             repl = NamedSharding(mesh, P())
             kwargs.update(
-                in_shardings=(tuple(self._state_shardings), repl,
-                              batch_spec, batch_spec, repl, batch_spec),
+                in_shardings=(tuple(self._state_shardings), repl)
+                + (batch_spec,) * n_arrays + (repl, batch_spec),
                 out_shardings=(batch_spec, repl),
             )
         step = jax.jit(fused, **kwargs)
-        self._fused_cache[reduce_fn] = step
+        self._fused_cache[(lane, reduce_fn)] = step
         return step
+
+    def _stream(self, lane, batches, on_result, reduce_fn, reduce_init,
+                warmup_batch) -> StreamResult:
+        """The lane-generic stream body behind `map_stream` /
+        `map_long_stream`: fused dispatch, carry donation, warmup, tail
+        padding and the end-of-stream stat fetch."""
+        _, _, keys, n_arrays = self._LANES[lane]
+        stream_batch = self.exec_cfg.stream_batch
+        step = self._fused_step(reduce_fn, lane)
+        # Copy reduce_init: the fused step donates its carry, and the
+        # caller's arrays must survive (e.g. reuse across streams).
+        carry = (init_stage_totals(keys), jax.tree.map(jnp.copy, reduce_init))
+
+        with warnings.catch_warnings():
+            # Donated read buffers have no size-matching output on CPU;
+            # XLA's "donated buffers were not usable" note is expected.
+            warnings.filterwarnings("ignore", message=_DONATE_MSG,
+                                    category=UserWarning)
+            if warmup_batch is not None:
+                reads, aux = split_batch(warmup_batch, n_arrays)
+                # With no pinned stream_batch, the warmup batch fixes the
+                # stream shape — otherwise the first real batch would
+                # retrace inside the timed region.
+                if stream_batch is None:
+                    stream_batch = int(np.asarray(reads[0]).shape[0])
+                nb = stream_batch
+                wa = jax.tree.map(lambda a: pad_tail(a, nb), aux)
+                # Throwaway carry: a deep copy, because the step donates
+                # its carry buffers and the real loop reuses reduce_init.
+                scrap_carry = jax.tree.map(jnp.copy, carry)
+                _, scrap = step(self._state, scrap_carry,
+                                *(pad_tail(r, nb) for r in reads),
+                                jnp.int32(nb), wa)
+                jax.block_until_ready(scrap)
+
+            def dispatch(*args):
+                nonlocal carry
+                *reads, n, aux = args
+                res, carry = step(self._state, carry, *reads,
+                                  jnp.int32(n), aux)
+                return res
+
+            n_items, n_batches, seconds, _ = run_stream(
+                dispatch, batches, stream_batch=stream_batch,
+                on_result=on_result, n_arrays=n_arrays)
+        totals, reduced = carry
+        return StreamResult(n_pairs=n_items, n_batches=n_batches,
+                            seconds=seconds,
+                            totals=fetch_stage_totals(totals),
+                            reduced=reduced)
 
     def map_stream(self, batches, on_result=None, reduce_fn=None,
                    reduce_init=None, warmup_batch=None) -> StreamResult:
@@ -218,45 +322,22 @@ class Mapper:
         ``on_result(idx, res, n_valid)`` sees each device-side result one
         batch late (pipelined).
         """
-        stream_batch = self.exec_cfg.stream_batch
-        step = self._fused_step(reduce_fn)
-        # Copy reduce_init: the fused step donates its carry, and the
-        # caller's arrays must survive (e.g. reuse across streams).
-        carry = (init_stage_totals(), jax.tree.map(jnp.copy, reduce_init))
+        return self._stream("pairs", batches, on_result, reduce_fn,
+                            reduce_init, warmup_batch)
 
-        with warnings.catch_warnings():
-            # Donated read buffers have no size-matching output on CPU;
-            # XLA's "donated buffers were not usable" note is expected.
-            warnings.filterwarnings("ignore", message=_DONATE_MSG,
-                                    category=UserWarning)
-            if warmup_batch is not None:
-                r1, r2, aux = split_batch(warmup_batch)
-                # With no pinned stream_batch, the warmup batch fixes the
-                # stream shape — otherwise the first real batch would
-                # retrace inside the timed region.
-                if stream_batch is None:
-                    stream_batch = int(np.asarray(r1).shape[0])
-                nb = stream_batch
-                wa = jax.tree.map(lambda a: pad_tail(a, nb), aux)
-                # Throwaway carry: a deep copy, because the step donates
-                # its carry buffers and the real loop reuses reduce_init.
-                scrap_carry = jax.tree.map(jnp.copy, carry)
-                _, scrap = step(self._state, scrap_carry,
-                                pad_tail(r1, nb), pad_tail(r2, nb),
-                                jnp.int32(nb), wa)
-                jax.block_until_ready(scrap)
+    def map_long_stream(self, batches, on_result=None, reduce_fn=None,
+                        reduce_init=None, warmup_batch=None) -> StreamResult:
+        """Stream ``(reads[, aux])`` long-read batches through the session.
 
-            def dispatch(r1, r2, n, aux):
-                nonlocal carry
-                res, carry = step(self._state, carry, r1, r2,
-                                  jnp.int32(n), aux)
-                return res
-
-            n_pairs, n_batches, seconds, _ = run_stream(
-                dispatch, batches, stream_batch=stream_batch,
-                on_result=on_result)
-        totals, reduced = carry
-        return StreamResult(n_pairs=n_pairs, n_batches=n_batches,
-                            seconds=seconds,
-                            totals=fetch_stage_totals(totals),
-                            reduced=reduced)
+        The long-read lane's `map_stream`: same fused-dispatch / carry-
+        donation / ``n_valid`` tail-masking machinery, one read array per
+        batch item and the lane's LONG_STAT_KEYS totals.  ``reduce_fn``
+        sees `LongReadResult` batches.
+        """
+        if self._raw_long_step is None:
+            raise NotImplementedError(
+                "the long-read lane is not available on shard_index "
+                "sessions; build a replicated-index Mapper for "
+                "map_long_stream")
+        return self._stream("long", batches, on_result, reduce_fn,
+                            reduce_init, warmup_batch)

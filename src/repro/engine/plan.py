@@ -26,12 +26,18 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.genpairx_step import make_genpair_serve_step
+from repro.core.long_read import LongReadConfig, map_long_impl
 from repro.core.pipeline import MapResult, PipelineConfig, map_pairs_impl
 from repro.core.seedmap import SeedMapConfig
 
 
-def _mask_tail(res: MapResult, n: jnp.ndarray) -> MapResult:
-    B = res.method.shape[0]
+def _mask_tail(res, n: jnp.ndarray):
+    """Set a step result's ``n_valid`` to the leading-rows mask.
+
+    Works for any result NamedTuple with a (B,) ``n_valid`` field
+    (`MapResult`, `LongReadResult`).
+    """
+    B = res.n_valid.shape[0]
     return res._replace(n_valid=jnp.arange(B, dtype=jnp.int32) < n)
 
 
@@ -47,6 +53,20 @@ def raw_pipeline_step(cfg: PipelineConfig):
 
     def step(sm, ref, reads1, reads2, n):
         return _mask_tail(map_pairs_impl(sm, ref, reads1, reads2, cfg), n)
+
+    return step
+
+
+def raw_long_read_step(cfg: LongReadConfig):
+    """Traceable replicated-index long-read lane step for ``cfg``.
+
+    ``step(sm, ref, reads, n) -> LongReadResult`` — same state layout as
+    `raw_pipeline_step` (the lane shares the session's index +
+    reference), one read batch instead of two mates.
+    """
+
+    def step(sm, ref, reads, n):
+        return _mask_tail(map_long_impl(sm, ref, reads, cfg), n)
 
     return step
 
@@ -77,12 +97,14 @@ def raw_sharded_index_step(
 def jit_step(raw, n_state: int, mesh: Mesh | None = None,
              state_shardings: tuple | None = None,
              batch_axes: tuple[str, ...] = ("data",),
-             donate_reads: bool = False):
+             donate_reads: bool = False, n_batch_args: int = 2):
     """Jit a raw step for the synchronous ``map`` path.
 
-    ``n_state`` is how many leading state arguments the raw step takes;
-    with ``mesh``, ``state_shardings`` gives one sharding per state arg
-    and reads shard over ``batch_axes``.
+    ``n_state`` is how many leading state arguments the raw step takes
+    and ``n_batch_args`` how many read-batch arrays follow (2 mates for
+    the pair step, 1 for the long-read lane), before the trailing ``n``
+    scalar; with ``mesh``, ``state_shardings`` gives one sharding per
+    state arg and the batch arrays shard over ``batch_axes``.
     """
     kwargs = {}
     if mesh is not None:
@@ -90,11 +112,12 @@ def jit_step(raw, n_state: int, mesh: Mesh | None = None,
         repl = NamedSharding(mesh, P())
         kwargs = dict(
             in_shardings=tuple(state_shardings)
-            + (batch_spec, batch_spec, repl),
+            + (batch_spec,) * n_batch_args + (repl,),
             out_shardings=batch_spec,
         )
     if donate_reads:
-        kwargs["donate_argnums"] = (n_state, n_state + 1)
+        kwargs["donate_argnums"] = tuple(
+            range(n_state, n_state + n_batch_args))
     return jax.jit(raw, **kwargs)
 
 

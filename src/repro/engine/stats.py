@@ -18,10 +18,21 @@ STAT_KEYS = (
     "n_pairs",
 )
 
+#: the long-read lane's accumulated keys (`long_stage_stat_counts`):
+#: vote outcomes plus per-read candidate / winning-vote totals (their
+#: fractions read as means per read) and the valid-read total
+LONG_STAT_KEYS = (
+    "lr_no_vote", "lr_mapped", "lr_candidates", "lr_winning_votes",
+    "n_reads",
+)
 
-def init_stage_totals() -> dict:
-    """Fresh all-zero device accumulator."""
-    return {k: jnp.zeros((), jnp.int32) for k in STAT_KEYS}
+#: batch-size keys — the denominators of `stage_fractions`
+_DENOM_KEYS = ("n_pairs", "n_reads")
+
+
+def init_stage_totals(keys: tuple = STAT_KEYS) -> dict:
+    """Fresh all-zero device accumulator for a lane's stat keys."""
+    return {k: jnp.zeros((), jnp.int32) for k in keys}
 
 
 def fetch_stage_totals(totals: dict) -> dict:
@@ -30,6 +41,10 @@ def fetch_stage_totals(totals: dict) -> dict:
 
 
 def stage_fractions(totals: dict) -> dict:
-    """Fig. 10 fractions from fetched (python-int) totals."""
-    n = max(totals.get("n_pairs", 0), 1)
-    return {k: totals[k] / n for k in STAT_KEYS if k != "n_pairs"}
+    """Per-item fractions from fetched (python-int) totals.
+
+    Divides by whichever batch-size key the lane accumulated
+    (``n_pairs`` for `map_stream`, ``n_reads`` for `map_long_stream`).
+    """
+    n = max(max(totals.get(k, 0) for k in _DENOM_KEYS), 1)
+    return {k: v / n for k, v in totals.items() if k not in _DENOM_KEYS}

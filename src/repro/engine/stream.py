@@ -41,7 +41,9 @@ class StreamResult:
     ``reduce_fn`` (device arrays, already fully computed — reading them
     costs one sync), or None.  ``seconds`` covers dispatch of the first
     batch through full drain of the last (compile/warmup excluded when a
-    warmup batch was given).
+    warmup batch was given).  ``n_pairs`` counts the stream's valid
+    items — read pairs on `map_stream`, single long reads on
+    `map_long_stream`.
     """
 
     n_pairs: int
@@ -75,41 +77,48 @@ def pad_tail(arr, batch: int):
     return np.concatenate([arr, pad], axis=0)
 
 
-def split_batch(item):
-    """(reads1, reads2[, aux]) -> (reads1, reads2, aux_pytree)."""
-    if len(item) == 2:
-        return item[0], item[1], ()
-    r1, r2, aux = item
-    return r1, r2, aux
+def split_batch(item, n_arrays: int = 2):
+    """(arr_0, ..., arr_{n-1}[, aux]) -> ((arr_0, ...), aux_pytree).
+
+    ``n_arrays`` is the lane's read-array count per batch item: 2 mates
+    on `map_stream`, 1 read batch on `map_long_stream`.
+    """
+    if len(item) == n_arrays:
+        return tuple(item), ()
+    if len(item) != n_arrays + 1:
+        raise ValueError(
+            f"stream batch items must have {n_arrays} read arrays plus an "
+            f"optional aux pytree; got a length-{len(item)} tuple")
+    return tuple(item[:n_arrays]), item[n_arrays]
 
 
 def run_stream(dispatch, batches, *, stream_batch=None,
-               on_result=None) -> tuple[int, int, float, object]:
-    """Drive ``dispatch(reads1, reads2, n, aux) -> MapResult`` over batches.
+               on_result=None, n_arrays: int = 2) -> tuple[int, int, float,
+                                                           object]:
+    """Drive ``dispatch(*reads, n, aux) -> result`` over batches.
 
-    ``batches`` yields ``(reads1, reads2)`` or ``(reads1, reads2, aux)``
-    host items; the first batch fixes the stream shape unless
-    ``stream_batch`` pins it.  Returns ``(n_pairs, n_batches, seconds,
-    last_result)``; accumulation state lives inside ``dispatch`` (the
-    Mapper's fused carry).
+    ``batches`` yields ``(*reads,)`` or ``(*reads, aux)`` host items with
+    ``n_arrays`` read arrays each; the first batch fixes the stream shape
+    unless ``stream_batch`` pins it.  Returns ``(n_items, n_batches,
+    seconds, last_result)``; accumulation state lives inside ``dispatch``
+    (the Mapper's fused carry).
     """
-    n_pairs = 0
+    n_items = 0
     n_batches = 0
     prev = None
     res = None
     t0 = time.time()
     for idx, item in enumerate(batches):
-        reads1, reads2, aux = split_batch(item)
-        n = int(np.asarray(reads1).shape[0])
+        reads, aux = split_batch(item, n_arrays)
+        n = int(np.asarray(reads[0]).shape[0])
         if stream_batch is None:
             stream_batch = n
-        r1 = pad_tail(reads1, stream_batch)
-        r2 = pad_tail(reads2, stream_batch)
+        padded = tuple(pad_tail(r, stream_batch) for r in reads)
         aux = jax.tree.map(lambda a: pad_tail(a, stream_batch), aux)
         # Async dispatch: the host returns immediately and moves on to
         # simulate/transfer the next batch while the device works.
-        res = dispatch(r1, r2, n, aux)
-        n_pairs += n
+        res = dispatch(*padded, n, aux)
+        n_items += n
         n_batches += 1
         if prev is not None and on_result is not None:
             on_result(*prev)
@@ -117,5 +126,5 @@ def run_stream(dispatch, batches, *, stream_batch=None,
     if prev is not None and on_result is not None:
         on_result(*prev)
     if res is not None:
-        res.pos1.block_until_ready()
-    return n_pairs, n_batches, time.time() - t0, res
+        jax.block_until_ready(res)
+    return n_items, n_batches, time.time() - t0, res

@@ -36,6 +36,28 @@ def unpack_window_block(raw: jnp.ndarray, off: jnp.ndarray,
     return out
 
 
+def clamp_window_starts(pos: jnp.ndarray, valid: jnp.ndarray, ref_len: int,
+                        width: int, lead: int) -> jnp.ndarray:
+    """Saturating clamp of candidate window starts (the PR 5 fix).
+
+    ``pos`` are candidate start positions whose ``width``-wide reference
+    window begins ``lead`` bases earlier (``window = [pos - lead, pos -
+    lead + width)``); ``valid`` masks INVALID_LOC slots to 0.  The result
+    is clamped to ``[lead - width, ref_len - 1 + lead]`` — exactly the
+    range where `gather_ref_windows`' per-element index clamp saturates
+    the whole window to all-``ref[0]`` / all-``ref[ref_len-1]`` anyway —
+    so a contiguous DMA against a ``width``-lead edge-padded reference
+    (DMA start ``result + (width - lead)``) reproduces the oracle's
+    window for EVERY int32 start, including the negative starts
+    `merge_read_starts` emits near the reference origin and the
+    negative-diagonal vote positions of the long-read lane.  Shared by
+    the candidate_align / residual_dp unpacked preps and the long-read
+    diagonal windows, so kernel and oracle cannot diverge at the edges.
+    """
+    return jnp.clip(jnp.where(valid, pos, 0),
+                    lead - width, ref_len - 1 + lead).astype(jnp.int32)
+
+
 def pad_rows(x: jnp.ndarray, total: int) -> jnp.ndarray:
     """Zero-pad axis 0 of ``x`` up to ``total`` rows (no-op if equal)."""
     if total == x.shape[0]:

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.core.encoding import BASES_PER_WORD, packed_gather_coords
 from repro.core.scoring import Scoring
 from repro.core.seedmap import INVALID_LOC
-from repro.kernels._util import chunked_launch, pad_rows
+from repro.kernels._util import chunked_launch, clamp_window_starts, pad_rows
 from repro.kernels.backend import resolve_backend
 from repro.kernels.candidate_align.kernel import (
     DEFAULT_BLOCK,
@@ -94,13 +94,12 @@ def candidate_pair_align(
             [words, jnp.broadcast_to(words[-1:], (n_words,))])
         win_elems = n_words
     else:
-        # Edge-pad a full window width of boundary bases on each side so
-        # a contiguous DMA reproduces gather_ref_windows' per-element
-        # index clamp for EVERY int32 start — including the negative
-        # starts merge_read_starts emits for reads near the reference
-        # origin (start = location - seed_offset) and starts past L.
-        # Starts are clamped only to the range where the oracle's window
-        # saturates to all-ref[0] / all-ref[L-1] anyway.
+        # Edge-pad a full window width of boundary bases on each side and
+        # clamp starts with the shared saturating clamp
+        # (`clamp_window_starts`), so a contiguous DMA reproduces
+        # gather_ref_windows' per-element index clamp for EVERY int32
+        # start — including the negative starts merge_read_starts emits
+        # for reads near the reference origin.
         L = ref.shape[0]
         r32 = ref.astype(jnp.int32)
         ref_arr = jnp.concatenate([
@@ -109,9 +108,8 @@ def candidate_pair_align(
         ])
 
         def prep(pos, valid):
-            s = jnp.clip(jnp.where(valid, pos, 0), E - W, L - 1 + E)
-            return (s + (W - E)).astype(jnp.int32), \
-                jnp.zeros_like(s, jnp.int32)
+            s = clamp_window_starts(pos, valid, L, W, E)
+            return s + (W - E), jnp.zeros_like(s, jnp.int32)
 
         sdma1, off1 = prep(pos1, valid1)
         sdma2, off2 = prep(pos2, valid2)

@@ -1,0 +1,4 @@
+from repro.kernels.location_vote.ops import location_vote
+from repro.kernels.location_vote.ref import VoteResult, location_vote_ref
+
+__all__ = ["VoteResult", "location_vote", "location_vote_ref"]

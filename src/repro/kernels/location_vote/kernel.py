@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: the Location Voting reduction (§4.7, [85]).
+
+Each lane is one long read; its (M,) candidate-diagonal row streams from
+HBM into VMEM and reduces to the winning vote bin + count without ever
+materializing a histogram: an M-step `fori_loop` accumulates each slot's
+bin multiplicity with an all-pairs compare (``counts += (vbin ==
+vbin[:, j]) & valid[j]``), then ``votes = max`` over the valid counts and
+``win_bin = min`` bin among the maxima — the same smallest-bin tie-break
+`ref.py` pins.  O(M^2) compares on the VPU beat a VMEM histogram: M is
+the per-read candidate budget ((S-1) * max_candidates, ~100), while the
+bin range spans the whole reference.
+
+Same double-buffered DMA protocol as `residual_dp`: the per-read row
+starts ride in as a scalar-prefetch table, two VMEM banks ping-pong
+between "being reduced" and "being filled", and both the issue and the
+wait are gated on the block being live (``step * BLK < n_rows``), so the
+grid steps past the batch's true row count cost neither HBM traffic nor
+compute — they just write zero sentinels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.seedmap import INVALID_LOC
+
+DEFAULT_BLOCK = 64     # reads per grid step
+N_BANKS = 2            # ping-pong VMEM diagonal-row banks
+
+# Reads per pallas launch (ops.py chunks bigger batches): the
+# scalar-prefetch DMA start table is SMEM-resident at rows * 4 bytes per
+# launch, bounded no matter how large the read batch is.
+LAUNCH_ROWS = 4096
+
+
+def _location_vote_kernel(
+    # scalar prefetch (SMEM, visible to every grid step)
+    sdma_ref,                    # (rows,) int32 diagonal-row DMA starts
+    nrows_ref,                   # (1,) int32 live read count of this launch
+    # inputs
+    diag_any,                    # (rows*M,) int32 ANY/HBM: flat diagonals
+    # outputs, all (BLK, 1) int32
+    bin_ref, votes_ref, did_ref,
+    # scratch
+    win,                         # (N_BANKS, BLK, M) int32 VMEM
+    sems,                        # (N_BANKS, BLK) DMA semaphores
+    *,
+    M: int, vote_bin: int,
+):
+    BLK = bin_ref.shape[0]
+    g = pl.program_id(0)
+    nsteps = pl.num_programs(0)
+    n = nrows_ref[0]
+    bank = jax.lax.rem(g, N_BANKS)
+
+    def live(step):
+        return step * BLK < n
+
+    # ---- ping-pong row streaming HBM -> VMEM (live blocks only) ---------
+    def _dma(step, bnk, r):
+        s = sdma_ref[step * BLK + r]
+        return pltpu.make_async_copy(
+            diag_any.at[pl.ds(s, M)], win.at[bnk, r], sems.at[bnk, r])
+
+    def _start_step(step, bnk):
+        def issue(r, _):
+            _dma(step, bnk, r).start()
+            return 0
+        jax.lax.fori_loop(0, BLK, issue, 0)
+
+    def _wait_step(step, bnk):
+        def drain(r, _):
+            _dma(step, bnk, r).wait()
+            return 0
+        jax.lax.fori_loop(0, BLK, drain, 0)
+
+    @pl.when((g == 0) & live(0))
+    def _():                     # warm-up: first step fetches its own bank
+        _start_step(0, 0)
+
+    @pl.when((g + 1 < nsteps) & live(g + 1))
+    def _():                     # prefetch next live step, other bank
+        _start_step(g + 1, jax.lax.rem(g + 1, N_BANKS))
+
+    @pl.when(live(g))
+    def _():                     # this block holds real reads
+        _wait_step(g, bank)
+        d = win[bank]                                  # (BLK, M)
+        valid = d != INVALID_LOC
+        # Floored division, matching the oracle: negative near-origin
+        # diagonals must round toward -inf, not toward zero.
+        vbin = jnp.floor_divide(d, vote_bin)
+
+        def count_slot(j, counts):
+            bj = jax.lax.dynamic_slice_in_dim(vbin, j, 1, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(valid, j, 1, axis=1)
+            return counts + jnp.where((vbin == bj) & vj, 1, 0)
+
+        counts = jax.lax.fori_loop(
+            0, M, count_slot, jnp.zeros((BLK, M), jnp.int32))
+        votes = jnp.max(jnp.where(valid, counts, 0), axis=-1)
+        at_max = valid & (counts == votes[:, None])
+        win_bin = jnp.min(
+            jnp.where(at_max, vbin, jnp.int32(INVALID_LOC)), axis=-1)
+        bin_ref[...] = jnp.where(votes > 0, win_bin, 0)[:, None]
+        votes_ref[...] = votes[:, None]
+        did_ref[...] = jnp.ones((BLK, 1), jnp.int32)
+
+    @pl.when(~live(g))
+    def _():                     # dead block: sentinels, no DMA, no vote
+        bin_ref[...] = jnp.zeros((BLK, 1), jnp.int32)
+        votes_ref[...] = jnp.zeros((BLK, 1), jnp.int32)
+        did_ref[...] = jnp.zeros((BLK, 1), jnp.int32)
+
+
+def location_vote_pallas(
+    flat_diag: jnp.ndarray,      # (rows*M,) int32 flattened diagonal rows
+    sdma: jnp.ndarray,           # (rows,) int32 row DMA starts
+    n_rows: jnp.ndarray,         # (1,) int32 live read count
+    vote_bin: int,
+    M: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+):
+    """rows must be a multiple of `block` (ops.py pads and chunks).
+
+    Returns 3 (rows,) int32 arrays: (win_bin, votes, did) — `did` is 1
+    exactly on the lanes of grid steps that executed at runtime.
+    """
+    rows = sdma.shape[0]
+    assert rows % block == 0, (rows, block)
+    grid = (rows // block,)
+    row_spec = lambda cols: pl.BlockSpec((block, cols), lambda i, *_: (i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=[row_spec(1)] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((N_BANKS, block, M), jnp.int32),
+            pltpu.SemaphoreType.DMA((N_BANKS, block)),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_location_vote_kernel, M=M, vote_bin=vote_bin),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((rows, 1), jnp.int32)] * 3,
+        interpret=interpret,
+    )(sdma, n_rows, flat_diag)
+    return tuple(o[:, 0] for o in outs)

@@ -1,0 +1,63 @@
+"""jnp oracle for the Location Voting reduction (§4.7, [85]).
+
+Every surviving pseudo-pair candidate of a long read proposes a read-start
+diagonal (candidate position minus the segment's in-read offset); the
+diagonals are binned by ``vote_bin`` and the most-voted bin wins.  This
+module is the bit-exact contract the Pallas kernel is pinned against:
+
+  * a slot's *vote count* is the multiplicity of its bin among the read's
+    valid candidates;
+  * ``votes`` is the maximum multiplicity (0 when every slot is invalid);
+  * ``win_bin`` is the SMALLEST bin among the maxima (deterministic
+    tie-break: of equally-voted diagonals, the left-most on the
+    reference wins), and 0 when ``votes == 0`` — callers map the no-vote
+    case to INVALID_LOC via ``votes > 0``.
+
+Binning uses floored division: near-origin candidates yield *negative*
+diagonals, and flooring (toward -inf) keeps a bin's positions a
+contiguous ``[bin * vote_bin, (bin+1) * vote_bin)`` range there too —
+truncating division would fold bins -1 and 0 together and diverge from
+the kernel.
+
+The oracle counts multiplicities without a histogram or scatter: sort the
+bins, then each slot's count is ``searchsorted(right) -
+searchsorted(left)`` of its own value — O(M log M), fully vectorized.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.seedmap import INVALID_LOC
+
+
+class VoteResult(NamedTuple):
+    """Location-vote outcome for a batch of long reads.
+
+    win_bin: (B,) int32 winning diagonal bin (0 when votes == 0)
+    votes:   (B,) int32 winning vote count (0: no valid candidate)
+    """
+
+    win_bin: jnp.ndarray
+    votes: jnp.ndarray
+
+
+def location_vote_ref(diag: jnp.ndarray, vote_bin: int) -> VoteResult:
+    """(B, M) int32 candidate diagonals (INVALID_LOC padded) -> VoteResult."""
+    d = diag.astype(jnp.int32)
+    valid = d != INVALID_LOC
+    # INVALID_LOC (int32 max) floor-divides to the highest possible bin;
+    # keeping the sentinel itself makes invalid slots sort last AND stay
+    # distinguishable from any real bin.
+    vbin = jnp.where(valid, jnp.floor_divide(d, vote_bin),
+                     jnp.int32(INVALID_LOC))
+    sb = jnp.sort(vbin, axis=-1)
+    lo = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(sb)
+    hi = jax.vmap(lambda s: jnp.searchsorted(s, s, side="right"))(sb)
+    cnt = jnp.where(sb != INVALID_LOC, (hi - lo).astype(jnp.int32), 0)
+    votes = jnp.max(cnt, axis=-1)
+    at_max = (cnt == votes[:, None]) & (sb != INVALID_LOC)
+    win = jnp.min(jnp.where(at_max, sb, jnp.int32(INVALID_LOC)), axis=-1)
+    return VoteResult(win_bin=jnp.where(votes > 0, win, 0), votes=votes)

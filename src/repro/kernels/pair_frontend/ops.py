@@ -104,6 +104,42 @@ def pair_frontend(
                           n_hits1=nh1, n_hits2=nh2)
 
 
+def segment_pair_frontend(
+    rows: jnp.ndarray,       # (T, K) int32 padded location rows
+    reads: jnp.ndarray,      # (B, L) long reads, reference orientation
+    segment_len: int,
+    segment_stride: int,
+    seed_len: int,
+    seeds_per_read: int = 3,
+    hash_seed: int = 0,
+    delta: int = 500,
+    max_candidates: int = 8,
+    block: int = DEFAULT_BLOCK,
+    backend: str = "auto",
+) -> FrontendResult:
+    """Long-read pseudo-pair front end (§4.7): segmentation as a window op
+    feeding the fused pair front end.
+
+    Each (B, L) read is cut into ``segment_len``-wide views every
+    ``segment_stride`` bases; consecutive segments become the mates of
+    ``S - 1`` pseudo-pairs per read, routed through `pair_frontend`
+    unchanged (mate 2 is NOT revcomp'd — both segments already sit in
+    reference orientation).  Returns the FrontendResult over the
+    row-major ``(B * (S-1),)`` pseudo-pair batch.
+    """
+    # Imported at call time: core.long_read imports core.pipeline, which
+    # pulls in repro.kernels; a module-level import here would be circular
+    # when the kernels package is imported first.
+    from repro.core.long_read import segment_views
+
+    segs = segment_views(reads, segment_len, segment_stride)
+    B, S, R = segs.shape
+    r1 = segs[:, :-1].reshape(B * (S - 1), R)
+    r2 = segs[:, 1:].reshape(B * (S - 1), R)
+    return pair_frontend(rows, r1, r2, seed_len, seeds_per_read, hash_seed,
+                         delta, max_candidates, block=block, backend=backend)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("seed_offs", "delta", "max_candidates", "block",

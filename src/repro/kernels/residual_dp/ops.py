@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.core.encoding import BASES_PER_WORD, packed_gather_coords
 from repro.core.scoring import Scoring
 from repro.core.seedmap import INVALID_LOC
-from repro.kernels._util import chunked_launch, pad_rows
+from repro.kernels._util import chunked_launch, clamp_window_starts, pad_rows
 from repro.kernels.backend import resolve_backend
 from repro.kernels.banded_sw.kernel import NEG
 from repro.kernels.residual_dp.kernel import (
@@ -93,13 +93,12 @@ def residual_pair_dp(
             [words, jnp.broadcast_to(words[-1:], (n_words,))])
         win_elems = n_words
     else:
-        # Edge-pad a full window width of boundary bases on each side so
-        # a contiguous DMA reproduces gather_ref_windows' per-element
-        # index clamp for EVERY int32 start — including the negative
-        # starts merge_read_starts emits for reads near the reference
-        # origin (start = location - seed_offset) and starts past L.
-        # Starts are clamped only to the range where the oracle's window
-        # saturates to all-ref[0] / all-ref[L-1] anyway.
+        # Edge-pad a full window width of boundary bases on each side and
+        # clamp starts with the shared saturating clamp
+        # (`clamp_window_starts`), so a contiguous DMA reproduces
+        # gather_ref_windows' per-element index clamp for EVERY int32
+        # start — including the negative starts merge_read_starts emits
+        # for reads near the reference origin.
         L = ref.shape[0]
         r32 = ref.astype(jnp.int32)
         ref_arr = jnp.concatenate([
@@ -108,10 +107,8 @@ def residual_pair_dp(
         ])
 
         def prep(pos):
-            s = jnp.clip(jnp.where(pos != INVALID_LOC, pos, 0),
-                         dp_pad - W, L - 1 + dp_pad)
-            return (s + (W - dp_pad)).astype(jnp.int32), \
-                jnp.zeros_like(s, jnp.int32)
+            s = clamp_window_starts(pos, pos != INVALID_LOC, L, W, dp_pad)
+            return s + (W - dp_pad), jnp.zeros_like(s, jnp.int32)
 
         win_elems = W
 

@@ -15,9 +15,15 @@ call plus seven ``float()`` stage-stat syncs per batch — as the measured
 baseline; ``--compare`` runs both and writes the speedup JSON artifact CI
 uploads.
 
+``--workload long`` serves the long-read lane instead: `serve_long`
+streams simulated PacBio-like batches through ``mapper.map_long_stream``
+with a device-side vote-accuracy reduction.
+
 Usage (CPU):
   PYTHONPATH=src python -m repro.launch.serve --ref-len 500000 \
       --batches 10 --batch 512
+  PYTHONPATH=src python -m repro.launch.serve --workload long \
+      --batch 64 --batches 5
 """
 from __future__ import annotations
 
@@ -33,11 +39,11 @@ import numpy as np
 
 from repro.core import (
     PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
-    map_pairs_impl, random_reference, stage_stats,
+    map_pairs_impl, random_reference, simulate_long_reads, stage_stats,
 )
 from repro.core.seedmap import INVALID_LOC
 from repro.data.pipeline import ReadStreamConfig, read_pairs_for_step
-from repro.engine import ExecutionConfig, Mapper
+from repro.engine import ExecutionConfig, LongReadConfig, Mapper
 
 ACC_KEYS = ("mapped1", "mapped2", "correct1", "correct2",
             "pair_mapped", "pair_correct")
@@ -139,6 +145,66 @@ def _serve_stream(ref, sm, stream, sim_cfg, batch, batches, pipe_cfg,
                                                           1),
         **sr.fractions,
     }
+
+
+def serve_long(ref_len: int = 500_000, batch: int = 64, batches: int = 10,
+               table_bits: int = 20, read_len: int = 4500,
+               sub_rate: float = 0.01,
+               lr_cfg: LongReadConfig = LongReadConfig(),
+               seed: int = 0, verbose: bool = True) -> dict:
+    """The long-read serve workload (``--workload long``).
+
+    Same shape as the pair loop: offline index + session build (the
+    long-read lane resolves at `Mapper` build), then `map_long_stream`
+    over simulated PacBio-like batches with a device-side accuracy
+    reduction (mapped / voted position within one vote bin of truth) —
+    one fused dispatch per batch, one host sync at the end.
+    """
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    ref = random_reference(ref_len, rng)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+    t_index = time.time() - t0
+    mapper = Mapper.from_index(
+        sm, ref, lr_cfg.pipe,
+        ExecutionConfig(stream_batch=batch, long_read=lr_cfg))
+    bin_ = mapper.lr_cfg.vote_bin
+
+    def gen():
+        for step in range(batches):
+            reads, starts = simulate_long_reads(
+                ref, batch, read_len, sub_rate, seed=seed + 1 + step)
+            yield reads, (jnp.asarray(starts),)
+
+    def accuracy(acc, res, aux):
+        (true,) = aux
+        m = res.mapped & res.n_valid
+        c = m & (jnp.abs(res.position - true) <= bin_)
+        return {"mapped": acc["mapped"] + jnp.sum(m.astype(jnp.int32)),
+                "correct": acc["correct"] + jnp.sum(c.astype(jnp.int32))}
+
+    w_reads, w_starts = simulate_long_reads(ref, batch, read_len, sub_rate,
+                                            seed=seed)
+    sr = mapper.map_long_stream(
+        gen(), reduce_fn=accuracy,
+        reduce_init={"mapped": jnp.zeros((), jnp.int32),
+                     "correct": jnp.zeros((), jnp.int32)},
+        warmup_batch=(w_reads, (jnp.asarray(w_starts),)))
+    a = {k: int(v) for k, v in sr.reduced.items()}
+    out = {
+        "reads": sr.n_pairs,
+        "reads_per_s": sr.pairs_per_s,
+        "mbp_per_s": sr.n_pairs * read_len / max(sr.seconds, 1e-9) / 1e6,
+        "index_build_s": t_index,
+        "loop": "stream",
+        "workload": "long",
+        "mapped_frac": a["mapped"] / max(sr.n_pairs, 1),
+        "correct_of_mapped": a["correct"] / max(a["mapped"], 1),
+        **sr.fractions,
+    }
+    if verbose:
+        print(json.dumps(out, indent=1), flush=True)
+    return out
 
 
 def _serve_legacy(ref, sm, stream, sim_cfg, batch, batches, pipe_cfg,
@@ -271,6 +337,11 @@ def main():
     ap.add_argument("--sub-rate", type=float, default=1e-3)
     ap.add_argument("--loop", choices=("stream", "legacy"),
                     default="stream")
+    ap.add_argument("--workload", choices=("pairs", "long"),
+                    default="pairs",
+                    help="short FR pairs (default) or the long-read lane")
+    ap.add_argument("--read-len", type=int, default=4500,
+                    help="--workload long read length (bp)")
     ap.add_argument("--compare", action="store_true",
                     help="run legacy + stream loops and report the speedup")
     ap.add_argument("--reps", type=int, default=3,
@@ -284,7 +355,10 @@ def main():
     if args.compare:
         compare_loops(out_path=args.out, reps=args.reps, **kwargs)
         return
-    out = serve(loop=args.loop, **kwargs)
+    if args.workload == "long":
+        out = serve_long(read_len=args.read_len, **kwargs)
+    else:
+        out = serve(loop=args.loop, **kwargs)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

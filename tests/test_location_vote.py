@@ -1,0 +1,182 @@
+"""Tests for the Location Voting kernel family + the long-read lane.
+
+- `location_vote` interpret-mode kernel vs the jnp sort/searchsorted
+  oracle vs a naive python Counter oracle across a (M, vote_bin, block)
+  grid — negative diagonals (floored binning), all-invalid rows,
+  smallest-bin tie-breaking, block padding;
+- `map_long_reads` staged-jnp vs fused-interpret bit-identity across a
+  (segment_len, stride, band) grid — the lane's exactness contract;
+- `Mapper.map_long` == `map_long_reads` under the session's resolved
+  lane config, and the shard-index guard;
+- `map_long_stream` ragged-tail totals (padded rows count nothing).
+"""
+import dataclasses
+from collections import Counter
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import random_reference, simulate_long_reads
+from repro.core.long_read import LongReadConfig, map_long_reads
+from repro.core.seedmap import INVALID_LOC, SeedMapConfig, build_seedmap
+from repro.engine import ExecutionConfig, Mapper
+from repro.kernels.location_vote import location_vote, location_vote_ref
+
+
+def _diags(B, M, seed, invalid_frac=0.4, lo=-400, hi=4000):
+    """Random diagonals with invalid slots and one all-invalid row."""
+    rng = np.random.default_rng(seed)
+    d = rng.integers(lo, hi, (B, M)).astype(np.int32)
+    d[rng.random((B, M)) < invalid_frac] = INVALID_LOC
+    d[0, :] = INVALID_LOC
+    return d
+
+
+def _naive_vote(diag_row, vote_bin):
+    """Python Counter oracle: floored bins, min-bin tie-break."""
+    bins = [int(d) // vote_bin for d in diag_row if d != INVALID_LOC]
+    if not bins:
+        return 0, 0
+    cnt = Counter(bins)
+    votes = max(cnt.values())
+    win = min(b for b, c in cnt.items() if c == votes)
+    return win, votes
+
+
+@pytest.mark.parametrize("M,vote_bin,block", [
+    (8, 64, 4), (24, 64, 4), (24, 32, 8), (33, 128, 16),
+])
+def test_vote_kernel_vs_ref_vs_naive(M, vote_bin, block):
+    diag = _diags(13, M, seed=M + vote_bin)
+    got = location_vote(jnp.asarray(diag), vote_bin, block=block,
+                        backend="interpret")
+    ref = location_vote_ref(jnp.asarray(diag), vote_bin)
+    np.testing.assert_array_equal(np.asarray(got.win_bin),
+                                  np.asarray(ref.win_bin))
+    np.testing.assert_array_equal(np.asarray(got.votes),
+                                  np.asarray(ref.votes))
+    for b in range(diag.shape[0]):
+        win, votes = _naive_vote(diag[b], vote_bin)
+        assert int(got.win_bin[b]) == win, b
+        assert int(got.votes[b]) == votes, b
+
+
+def test_vote_negative_bins_floored():
+    # near-origin diagonals: -1 // 64 must be -1 (floored), not 0
+    diag = jnp.asarray([[-1, -1, -1, 50, INVALID_LOC, INVALID_LOC]],
+                       jnp.int32)
+    res = location_vote(diag, 64, block=2, backend="interpret")
+    assert int(res.win_bin[0]) == -1 and int(res.votes[0]) == 3
+    ref = location_vote_ref(diag, 64)
+    assert int(ref.win_bin[0]) == -1 and int(ref.votes[0]) == 3
+
+
+def test_vote_tie_breaks_to_smallest_bin():
+    diag = jnp.asarray([[300, 300, 100, 100, INVALID_LOC]], jnp.int32)
+    for backend in ("interpret", "jnp"):
+        res = location_vote(diag, 64, block=2, backend=backend)
+        assert int(res.win_bin[0]) == 100 // 64
+        assert int(res.votes[0]) == 2
+
+
+def test_vote_all_invalid_row():
+    diag = jnp.full((3, 7), INVALID_LOC, jnp.int32)
+    for backend in ("interpret", "jnp"):
+        res = location_vote(diag, 64, block=2, backend=backend)
+        assert np.all(np.asarray(res.votes) == 0)
+        assert np.all(np.asarray(res.win_bin) == 0)
+
+
+def test_vote_block_padding_rows():
+    # B not a multiple of block: padded rows must not leak into [:B]
+    diag = _diags(5, 12, seed=9)
+    a = location_vote(jnp.asarray(diag), 64, block=4, backend="interpret")
+    b = location_vote_ref(jnp.asarray(diag), 64)
+    np.testing.assert_array_equal(np.asarray(a.win_bin),
+                                  np.asarray(b.win_bin))
+    np.testing.assert_array_equal(np.asarray(a.votes), np.asarray(b.votes))
+
+
+# ----------------------------------------------------------- the lane ---
+
+@pytest.fixture(scope="module")
+def lane_world():
+    rng = np.random.default_rng(11)
+    ref = random_reference(60_000, rng)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=17))
+    reads, starts = simulate_long_reads(ref, 6, 1500, seed=2)
+    return ref, sm, jnp.asarray(reads), starts
+
+
+def _flavors(cfg):
+    staged = dataclasses.replace(
+        cfg, vote_backend="jnp",
+        pipe=dataclasses.replace(cfg.pipe, frontend_backend="jnp",
+                                 residual_backend="jnp"))
+    fused = dataclasses.replace(
+        cfg, vote_backend="interpret",
+        pipe=dataclasses.replace(cfg.pipe, frontend_backend="interpret",
+                                 residual_backend="interpret"))
+    return staged, fused
+
+
+@pytest.mark.parametrize("seg_len,stride,band", [
+    (150, 300, None), (150, 300, 16), (150, 200, None), (200, 400, 24),
+])
+def test_lane_staged_vs_fused_bitexact(lane_world, seg_len, stride, band):
+    ref, sm, reads, starts = lane_world
+    cfg = LongReadConfig(segment_len=seg_len, segment_stride=stride,
+                         dp_band=band)
+    staged, fused = _flavors(cfg)
+    a = map_long_reads(sm, jnp.asarray(ref), reads, staged)
+    b = map_long_reads(sm, jnp.asarray(ref), reads, fused)
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), f)
+    err = np.abs(np.asarray(a.position) - starts)
+    assert np.all(np.asarray(a.mapped)) and np.all(err <= cfg.vote_bin)
+
+
+def test_mapper_map_long_matches_oracle(lane_world):
+    ref, sm, reads, starts = lane_world
+    m = Mapper.from_index(sm, ref,
+                          exec_cfg=ExecutionConfig(long_read=LongReadConfig()))
+    res = m.map_long(reads)
+    ora = map_long_reads(m.index, m._state[1], reads, m.lr_cfg)
+    for f in res._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(res, f)),
+                                      np.asarray(getattr(ora, f)), f)
+    # the lane inherits the session's resolved row cap + ref flavor
+    assert m.lr_cfg.pipe.max_locs_per_seed == m.pipe_cfg.max_locs_per_seed
+    assert m.lr_cfg.pipe.packed_ref == m.pipe_cfg.packed_ref
+
+
+def test_map_long_stream_ragged_tail(lane_world):
+    ref, sm, reads, starts = lane_world
+    m = Mapper.from_index(
+        sm, ref, exec_cfg=ExecutionConfig(long_read=LongReadConfig(),
+                                          stream_batch=6))
+
+    def batches():
+        for k, n in enumerate((6, 6, 4)):     # ragged tail: 4 < 6
+            r, s = simulate_long_reads(ref, n, 1500, seed=20 + k)
+            yield r, (jnp.asarray(s),)
+
+    def acc(state, res, aux):
+        (true,) = aux
+        ok = res.n_valid & res.mapped & (
+            jnp.abs(res.position - true) <= m.lr_cfg.vote_bin)
+        return state + ok.sum(dtype=jnp.int32)
+
+    sr = m.map_long_stream(batches(), reduce_fn=acc,
+                           reduce_init=jnp.zeros((), jnp.int32),
+                           warmup_batch=(np.asarray(reads),
+                                         (jnp.asarray(starts),)))
+    assert sr.n_pairs == 16 and sr.n_batches == 3
+    # padded tail rows count toward nothing
+    assert sr.totals["n_reads"] == 16
+    assert sr.totals["lr_mapped"] + sr.totals["lr_no_vote"] == 16
+    assert int(sr.reduced) <= 16
+    assert set(sr.fractions) == {"lr_no_vote", "lr_mapped",
+                                 "lr_candidates", "lr_winning_votes"}

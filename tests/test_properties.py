@@ -23,6 +23,9 @@
   P9  banded Gotoh == the full-DP numpy traceback oracle whenever the
       true alignment's diagonal (and every profitable detour from it)
       lies within the band, and is never above the full DP score.
+  P10 `segment_views` is the maximal exact tiling of a long read: S
+      satisfies (S-1)*stride + seg_len <= L < S*stride + seg_len and
+      each segment equals the read slice at its stride offset.
 """
 import jax
 import jax.numpy as jnp
@@ -308,6 +311,33 @@ def test_p9_banded_gotoh_exact_when_offset_in_band(case):
     tight = gotoh_semiglobal_banded(jnp.asarray(read[None]),
                                     jnp.asarray(win[None]), 1, SC)
     assert int(tight.score[0]) <= full_score
+
+
+@given(st.integers(0, 2**31), st.integers(20, 80), st.integers(10, 120),
+       st.integers(1, 600))
+@settings(max_examples=40, deadline=None)
+def test_p10_segment_views_tiling(seed, seg_len, stride, extra):
+    """P10: `segment_views` is the maximal exact tiling of the read.
+
+    S is maximal — segment S-1 fits, segment S would not — and every
+    segment is exactly the read slice at its stride offset (views, no
+    resampling), for overlapping (stride < seg_len), gapped and
+    remainder-bearing geometries alike.
+    """
+    from repro.core.long_read import segment_views
+
+    L = seg_len + extra                     # always fits >= 1 segment
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(0, 4, (2, L), dtype=np.uint8)
+    segs = np.asarray(segment_views(jnp.asarray(reads), seg_len, stride))
+    S = segs.shape[1]
+    assert segs.shape == (2, S, seg_len)
+    # maximality: the last segment fits, one more would overrun the read
+    assert (S - 1) * stride + seg_len <= L
+    assert S * stride + seg_len > L
+    for s in range(S):
+        np.testing.assert_array_equal(
+            segs[:, s], reads[:, s * stride:s * stride + seg_len])
 
 
 @given(st.integers(0, 2**31), st.integers(1, 4))
