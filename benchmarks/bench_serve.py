@@ -1,0 +1,161 @@
+"""ISSUE-7 — the serve front door: coalescing overhead + bursty latency.
+
+Two questions about `engine.frontdoor.FrontDoor`:
+
+  * what does the serving layer *cost* on traffic that needed no help —
+    requests arriving as full ``stream_batch`` device batches?  The
+    ``serve_overhead`` row runs the identical pre-batched trace through
+    raw `Mapper.map_stream` and through the front door (counterbalanced
+    reps, median) and gates the throughput ratio at >= 0.9x: admission
+    control, the latency ledger and per-batch retire bookkeeping must
+    stay under 10% of a batch step;
+  * what does bursty ragged two-lane traffic look like end-to-end?  The
+    ``serve_bursty`` row drives a seeded ragged arrival trace (pairs +
+    long reads) and reports pairs/s next to the queue-latency ledger's
+    p50/p99 — the service-level numbers a deployment would watch.
+
+Writes ``artifacts/bench/BENCH_serve.json`` (uploaded per merge by CI's
+interpret job alongside the kernel-lane BENCH series).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import reads_for, row
+from repro.core import PipelineConfig
+from repro.core.simulate import simulate_long_reads
+from repro.engine import ExecutionConfig, FrontDoor, FrontDoorConfig, Mapper
+
+BATCH = 64
+N_BATCHES = 8
+REPS = 3
+LONG_LEN = 2000
+N_LONG = 24
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def _session():
+    ref, sm, _, sim = reads_for(300_000, BATCH * N_BATCHES, 1e-3,
+                                table_bits=19)
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=BATCH))
+    lreads, _ = simulate_long_reads(ref, N_LONG, LONG_LEN, 0.01, seed=5)
+    return mapper, sim, lreads
+
+
+def _prebatched(sim):
+    return [(sim.reads1[i * BATCH:(i + 1) * BATCH],
+             sim.reads2[i * BATCH:(i + 1) * BATCH])
+            for i in range(N_BATCHES)]
+
+
+def _raw_once(mapper, batches) -> float:
+    t0 = time.perf_counter()
+    sr = mapper.map_stream(iter(batches))
+    dt = time.perf_counter() - t0
+    assert sr.n_pairs == BATCH * N_BATCHES
+    return dt
+
+
+def _door_once(mapper, batches) -> float:
+    with FrontDoor(mapper, FrontDoorConfig(record_requests=False)) as fd:
+        t0 = time.perf_counter()
+        report = fd.serve(("pairs", b) for b in batches)
+        dt = time.perf_counter() - t0
+    assert report["serve"]["completed_rows"] == BATCH * N_BATCHES
+    return dt
+
+
+def _bursty(mapper, sim, lreads) -> dict:
+    """Seeded ragged two-lane trace -> end-to-end pairs/s + p99 ledger."""
+    rng = np.random.default_rng(11)
+    with FrontDoor(mapper, FrontDoorConfig()) as fd:
+        fd.warmup(long_reads=lreads[:1])
+
+        def arrivals():
+            off = li = 0
+            total = BATCH * N_BATCHES
+            while off < total:
+                n = int(rng.integers(1, BATCH + 1)) if rng.random() < 0.25 \
+                    else int(rng.integers(1, max(2, BATCH // 8)))
+                n = min(n, total - off)
+                yield ("pairs", (sim.reads1[off:off + n],
+                                 sim.reads2[off:off + n]))
+                off += n
+                if li < N_LONG and rng.random() < 0.2:
+                    m = min(int(rng.integers(1, 5)), N_LONG - li)
+                    yield ("long", (lreads[li:li + m],))
+                    li += m
+
+        t0 = time.perf_counter()
+        report = fd.serve(arrivals())
+        dt = time.perf_counter() - t0
+    serve = report["serve"]
+    assert serve["accepted"] == serve["completed"]
+    assert serve["rejected"] == serve["shed"] == serve["expired"] == 0
+    lat = serve["latency"]["total_s"]
+    return {
+        "seconds": dt,
+        "pairs": report["stage_totals"]["pairs"]["n_pairs"],
+        "long_reads": report["stage_totals"]["long"]["n_reads"],
+        "requests": serve["completed"],
+        "batches": dict(serve["batches"]),
+        "fill": serve["batch_fill"],
+        "p50_ms": lat["p50"] * 1e3,
+        "p99_ms": lat["p99"] * 1e3,
+    }
+
+
+def run() -> list[dict]:
+    mapper, sim, lreads = _session()
+    batches = _prebatched(sim)
+
+    # compile the shared fused step outside every timed rep
+    _raw_once(mapper, batches)
+    _door_once(mapper, batches)
+    raw_s, door_s = [], []
+    for rep in range(REPS):        # counterbalanced A/B, B/A, A/B ...
+        first_raw = rep % 2 == 0
+        if first_raw:
+            raw_s.append(_raw_once(mapper, batches))
+            door_s.append(_door_once(mapper, batches))
+        else:
+            door_s.append(_door_once(mapper, batches))
+            raw_s.append(_raw_once(mapper, batches))
+    raw_med, door_med = float(np.median(raw_s)), float(np.median(door_s))
+    n_pairs = BATCH * N_BATCHES
+    ratio = round((n_pairs / door_med) / (n_pairs / raw_med), 3)
+
+    bursty = _bursty(mapper, sim, lreads)
+    rows = [
+        row("serve_raw_stream", raw_med * 1e6,
+            pairs_per_s=round(n_pairs / raw_med, 1)),
+        row("serve_overhead", door_med * 1e6,
+            pairs_per_s=round(n_pairs / door_med, 1),
+            frontdoor_vs_raw=ratio),
+        row("serve_bursty", bursty["seconds"] * 1e6,
+            pairs_per_s=round(bursty["pairs"] / bursty["seconds"], 1),
+            long_reads=bursty["long_reads"],
+            requests=bursty["requests"],
+            pair_fill=round(bursty["fill"]["pairs"], 3),
+            p50_latency_ms=round(bursty["p50_ms"], 2),
+            p99_latency_ms=round(bursty["p99_ms"], 2)),
+    ]
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "BENCH_serve.json"), "w") as f:
+        json.dump({"bench": "serve", "rows": rows,
+                   "bursty": {k: v for k, v in bursty.items()}},
+                  f, indent=1, default=str)
+    # Hard gate: coalescing + ledger overhead must keep the front door
+    # within 10% of raw map_stream on already-batched traffic.
+    assert ratio >= 0.9, rows
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

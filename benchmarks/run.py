@@ -32,6 +32,7 @@ MODULES = [
     ("cand_align", "benchmarks.bench_candidate_align"),
     ("pair_frontend", "benchmarks.bench_pair_frontend"),
     ("residual_dp", "benchmarks.bench_residual_dp"),
+    ("serve", "benchmarks.bench_serve"),
 ]
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")

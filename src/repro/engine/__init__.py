@@ -11,6 +11,13 @@ single pre-jitted step that is the same code for single-device and mesh
 execution; ``mapper.map_stream`` runs the async double-buffered host loop
 that keeps the fused kernels fed.
 
+``engine.frontdoor.FrontDoor`` is the continuous-batching serve layer
+over the same session: ragged per-request arrivals coalesced into the
+fixed-shape batches the fused stream steps want, with admission control,
+a per-request latency ledger (`ServeStats`) and a starvation-free
+two-lane scheduler — the piece that turns the benchmark harness into a
+service front end.
+
 The pre-engine entry points — `core.pipeline.map_pairs` and the
 `core.distributed.make_*` factories — survive as thin deprecation shims
 over the same implementations (warn once, delegate).
@@ -18,8 +25,11 @@ over the same implementations (warn once, delegate).
 from repro.core.long_read import LongReadConfig, LongReadResult
 from repro.core.pipeline import MapResult
 from repro.engine.config import ExecutionConfig
+from repro.engine.frontdoor import FrontDoor, FrontDoorConfig, Request
 from repro.engine.mapper import Mapper
+from repro.engine.stats import ServeStats
 from repro.engine.stream import StreamResult
 
-__all__ = ["ExecutionConfig", "LongReadConfig", "LongReadResult",
-           "MapResult", "Mapper", "StreamResult"]
+__all__ = ["ExecutionConfig", "FrontDoor", "FrontDoorConfig",
+           "LongReadConfig", "LongReadResult", "MapResult", "Mapper",
+           "Request", "ServeStats", "StreamResult"]

@@ -20,6 +20,7 @@ optional caller reduction.
 """
 from __future__ import annotations
 
+import collections
 import warnings
 
 import jax
@@ -65,6 +66,13 @@ from repro.engine.stream import (
 
 _DONATE_MSG = ".*donated.*"   # XLA's unusable-donation note, expected on CPU
 
+#: `Mapper._fused_cache` bound: distinct (lane, reduce_fn) fused steps
+#: kept per session.  Callers that pass a fresh closure per stream (the
+#: bug `_make_accuracy_reduce`-style cached factories exist to avoid)
+#: recompile anyway; the bound keeps them from also growing the cache
+#: without limit.
+_FUSED_CACHE_MAX = 8
+
 
 class Mapper:
     """A reusable paired-end mapping session (index + execution plan).
@@ -98,7 +106,9 @@ class Mapper:
                 raw_long_step, len(state), mesh=exec_cfg.mesh,
                 state_shardings=state_shardings,
                 batch_axes=exec_cfg.batch_axes, n_batch_args=1)
-        self._fused_cache: dict = {}
+        # LRU of fused stream steps, keyed (lane, reduce_fn), bounded at
+        # `_FUSED_CACHE_MAX` — see `_fused_step`.
+        self._fused_cache: collections.OrderedDict = collections.OrderedDict()
 
     # ------------------------------------------------------------ build --
     @classmethod
@@ -222,9 +232,17 @@ class Mapper:
         (stage_totals, reduce_state)`` donated — the rolling accumulators
         never round-trip the host — and the read buffers donated too
         (`ExecutionConfig.donate_reads`).
+
+        Steps are cached per ``(lane, reduce_fn)`` in a bounded LRU:
+        passing the *same* reduce callable across streams (use a cached
+        factory like `launch.serve._make_accuracy_reduce`, not a fresh
+        closure per call) reuses the jitted step; distinct callables
+        evict the least recently used entry past `_FUSED_CACHE_MAX`.
         """
-        if (lane, reduce_fn) in self._fused_cache:
-            return self._fused_cache[(lane, reduce_fn)]
+        key = (lane, reduce_fn)
+        if key in self._fused_cache:
+            self._fused_cache.move_to_end(key)
+            return self._fused_cache[key]
         raw_attr, counts_fn, keys, n_arrays = self._LANES[lane]
         raw = getattr(self, raw_attr)
         mesh = self.exec_cfg.mesh
@@ -251,7 +269,9 @@ class Mapper:
                 out_shardings=(batch_spec, repl),
             )
         step = jax.jit(fused, **kwargs)
-        self._fused_cache[(lane, reduce_fn)] = step
+        self._fused_cache[key] = step
+        while len(self._fused_cache) > _FUSED_CACHE_MAX:
+            self._fused_cache.popitem(last=False)
         return step
 
     def _stream(self, lane, batches, on_result, reduce_fn, reduce_init,
@@ -302,7 +322,10 @@ class Mapper:
         return StreamResult(n_pairs=n_items, n_batches=n_batches,
                             seconds=seconds,
                             totals=fetch_stage_totals(totals),
-                            reduced=reduced)
+                            reduced=reduced,
+                            # reads per stream item == the lane's read
+                            # arrays per batch: 2 mates / 1 long read.
+                            reads_per_item=n_arrays)
 
     def map_stream(self, batches, on_result=None, reduce_fn=None,
                    reduce_init=None, warmup_batch=None) -> StreamResult:

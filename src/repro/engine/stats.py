@@ -1,4 +1,5 @@
-"""Device-side StageStats state for the streaming host loop.
+"""Stream accounting state: device-side StageStats + the host-side
+`ServeStats` serving ledger.
 
 The pre-engine serve loop converted `stage_stats` fractions with
 ``float(v)`` per batch — seven blocking host syncs every step.  Here the
@@ -6,10 +7,18 @@ Fig. 10 counts stay device-resident int32 scalars: `Mapper._fused_step`
 adds `core.pipeline.stage_stat_counts` to this state inside the one
 jitted dispatch per batch (donated carry), and the totals are fetched
 exactly once when the stream ends.
+
+`ServeStats` is the front door's host-side twin (`engine.frontdoor`):
+per-request enqueue -> dispatch -> result latency samples, admission
+accounting (accepted / rejected / expired / shed) and per-lane batch
+fill, summarized next to the device-side stage totals in one ledger.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
+import numpy as np
 
 #: accumulated keys: the Fig. 10 stage counts plus the valid-pair total
 STAT_KEYS = (
@@ -48,3 +57,107 @@ def stage_fractions(totals: dict) -> dict:
     """
     n = max(max(totals.get(k, 0) for k in _DENOM_KEYS), 1)
     return {k: v / n for k, v in totals.items() if k not in _DENOM_KEYS}
+
+
+# --------------------------------------------------- the serving ledger --
+def _percentiles(samples: list, quantiles=(50, 99)) -> dict:
+    if not samples:
+        return {f"p{q}": 0.0 for q in quantiles}
+    arr = np.asarray(samples, dtype=np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in quantiles}
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Host-side serving ledger for the continuous-batching front door.
+
+    Request counts follow the admission-control lifecycle:
+
+      * ``accepted``  — admitted to a lane queue (and their row total);
+      * ``rejected``  — refused at submit: the bounded queue was full;
+      * ``expired``   — dropped at dispatch: the request's deadline had
+        passed while it waited;
+      * ``shed``      — refused at submit because the door was draining
+        (preemption); distinct from ``rejected`` so saturation and
+        shutdown are separately attributable;
+      * ``completed`` — results delivered (every accepted request ends
+        completed or expired — the drain contract).
+
+    Latency samples are per *request*, in seconds: ``queue_wait_s``
+    (enqueue -> dispatch), ``service_s`` (dispatch -> result
+    materialized) and ``total_s`` (enqueue -> result).  Batch fill is
+    per lane: ``batch_rows[lane] / (batches[lane] * capacity)`` is the
+    coalescer's achieved occupancy (the rest of each batch was padding).
+    """
+
+    accepted: int = 0
+    rejected: int = 0
+    expired: int = 0
+    shed: int = 0
+    completed: int = 0
+    accepted_rows: int = 0
+    rejected_rows: int = 0
+    expired_rows: int = 0
+    shed_rows: int = 0
+    completed_rows: int = 0
+    batches: dict = dataclasses.field(default_factory=dict)
+    batch_rows: dict = dataclasses.field(default_factory=dict)
+    degraded_batches: int = 0
+    queue_wait_s: list = dataclasses.field(default_factory=list)
+    service_s: list = dataclasses.field(default_factory=list)
+    total_s: list = dataclasses.field(default_factory=list)
+
+    def count(self, outcome: str, rows: int) -> None:
+        """Bump one lifecycle counter (+ its row total)."""
+        setattr(self, outcome, getattr(self, outcome) + 1)
+        attr = f"{outcome}_rows"
+        setattr(self, attr, getattr(self, attr) + rows)
+
+    def observe_request(self, *, rows: int, t_enqueue: float,
+                        t_dispatch: float, t_result: float) -> None:
+        """Record one completed request's latency decomposition."""
+        self.count("completed", rows)
+        self.queue_wait_s.append(t_dispatch - t_enqueue)
+        self.service_s.append(t_result - t_dispatch)
+        self.total_s.append(t_result - t_enqueue)
+
+    def observe_batch(self, lane: str, rows: int,
+                      degraded: bool = False) -> None:
+        self.batches[lane] = self.batches.get(lane, 0) + 1
+        self.batch_rows[lane] = self.batch_rows.get(lane, 0) + rows
+        if degraded:
+            self.degraded_batches += 1
+
+    def latency(self) -> dict:
+        """p50/p99 of the three per-request latency components."""
+        return {
+            "queue_wait_s": _percentiles(self.queue_wait_s),
+            "service_s": _percentiles(self.service_s),
+            "total_s": _percentiles(self.total_s),
+        }
+
+    def fill(self, capacity: int) -> dict:
+        """Per-lane mean batch occupancy (valid rows / device rows)."""
+        return {lane: self.batch_rows.get(lane, 0)
+                / max(n * capacity, 1)
+                for lane, n in self.batches.items()}
+
+    def ledger(self, capacity: int | None = None) -> dict:
+        """The JSON-able summary the serve drivers report."""
+        out = {
+            "accepted": self.accepted, "rejected": self.rejected,
+            "expired": self.expired, "shed": self.shed,
+            "completed": self.completed,
+            "accepted_rows": self.accepted_rows,
+            "rejected_rows": self.rejected_rows,
+            "expired_rows": self.expired_rows,
+            "shed_rows": self.shed_rows,
+            "completed_rows": self.completed_rows,
+            "batches": dict(self.batches),
+            "batch_rows": dict(self.batch_rows),
+            "degraded_batches": self.degraded_batches,
+            "latency": self.latency(),
+        }
+        if capacity is not None:
+            out["batch_fill"] = self.fill(capacity)
+        return out

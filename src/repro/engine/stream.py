@@ -40,10 +40,12 @@ class StreamResult:
     ints, fetched once); ``reduced`` is the final state of the caller's
     ``reduce_fn`` (device arrays, already fully computed — reading them
     costs one sync), or None.  ``seconds`` covers dispatch of the first
-    batch through full drain of the last (compile/warmup excluded when a
-    warmup batch was given).  ``n_pairs`` counts the stream's valid
-    items — read pairs on `map_stream`, single long reads on
-    `map_long_stream`.
+    batch through full drain of the last (host-side generation of the
+    first batch and compile/warmup excluded).  ``n_pairs`` counts the
+    stream's valid items — read pairs on `map_stream`, single long reads
+    on `map_long_stream` — and ``reads_per_item`` how many reads each
+    item carries (2 mates per pair, 1 per long read): the lane-aware
+    bases-per-item factor behind :meth:`mbp_per_s`.
     """
 
     n_pairs: int
@@ -51,13 +53,15 @@ class StreamResult:
     seconds: float
     totals: dict
     reduced: object = None
+    reads_per_item: int = 2
 
     @property
     def pairs_per_s(self) -> float:
         return self.n_pairs / max(self.seconds, 1e-9)
 
     def mbp_per_s(self, read_len: int) -> float:
-        return self.n_pairs * 2 * read_len / max(self.seconds, 1e-9) / 1e6
+        bases = self.n_pairs * self.reads_per_item * read_len
+        return bases / max(self.seconds, 1e-9) / 1e6
 
     @property
     def fractions(self) -> dict:
@@ -65,8 +69,14 @@ class StreamResult:
 
 
 def pad_tail(arr, batch: int):
-    """Zero-pad axis 0 of a ragged tail array up to the fixed stream shape."""
+    """Zero-pad axis 0 of a ragged tail array up to the fixed stream shape.
+
+    Scalar (0-d) aux leaves — per-batch values like a step id — have no
+    batch axis to pad and pass through unchanged.
+    """
     arr = np.asarray(arr)
+    if arr.ndim == 0:
+        return arr
     if arr.shape[0] == batch:
         return arr
     if arr.shape[0] > batch:
@@ -107,7 +117,7 @@ def run_stream(dispatch, batches, *, stream_batch=None,
     n_batches = 0
     prev = None
     res = None
-    t0 = time.time()
+    t0 = None
     for idx, item in enumerate(batches):
         reads, aux = split_batch(item, n_arrays)
         n = int(np.asarray(reads[0]).shape[0])
@@ -115,6 +125,11 @@ def run_stream(dispatch, batches, *, stream_batch=None,
             stream_batch = n
         padded = tuple(pad_tail(r, stream_batch) for r in reads)
         aux = jax.tree.map(lambda a: pad_tail(a, stream_batch), aux)
+        # The clock starts at the first *dispatch*: pulling the first
+        # batch from the iterator (read simulation / FASTQ decode) and
+        # padding it are host-side setup, not stream time.
+        if t0 is None:
+            t0 = time.time()
         # Async dispatch: the host returns immediately and moves on to
         # simulate/transfer the next batch while the device works.
         res = dispatch(*padded, n, aux)
@@ -127,4 +142,5 @@ def run_stream(dispatch, batches, *, stream_batch=None,
         on_result(*prev)
     if res is not None:
         jax.block_until_ready(res)
-    return n_items, n_batches, time.time() - t0, res
+    seconds = 0.0 if t0 is None else time.time() - t0
+    return n_items, n_batches, seconds, res

@@ -19,6 +19,12 @@ uploads.
 streams simulated PacBio-like batches through ``mapper.map_long_stream``
 with a device-side vote-accuracy reduction.
 
+``--loop frontdoor`` serves a synthetic *bursty ragged-arrival* trace —
+requests of 1..batch read pairs or long reads, both lanes interleaved —
+through the continuous-batching front door (`repro.engine.frontdoor`):
+queue coalescing, admission control and the per-request latency ledger,
+reported next to throughput in the output JSON.
+
 Usage (CPU):
   PYTHONPATH=src python -m repro.launch.serve --ref-len 500000 \
       --batches 10 --batch 512
@@ -39,7 +45,8 @@ import numpy as np
 
 from repro.core import (
     PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
-    map_pairs_impl, random_reference, simulate_long_reads, stage_stats,
+    map_pairs_impl, random_reference, simulate_long_reads, simulate_pairs,
+    stage_stats,
 )
 from repro.core.seedmap import INVALID_LOC
 from repro.data.pipeline import ReadStreamConfig, read_pairs_for_step
@@ -76,6 +83,26 @@ def _make_accuracy_reduce(max_gap: int):
         }
         return {k: acc[k] + jnp.sum(new[k].astype(jnp.int32))
                 for k in ACC_KEYS}
+
+    return reduce
+
+
+@functools.lru_cache(maxsize=None)
+def _make_vote_accuracy_reduce(vote_bin: int):
+    """Device-side long-read accuracy reduction (mapped / vote-correct).
+
+    Cached like `_make_accuracy_reduce` so repeated `serve_long` calls
+    hand `map_long_stream` the *same* callable — the Mapper's fused-step
+    cache keys on ``(lane, reduce_fn)``, and a fresh closure per call
+    would recompile every stream.
+    """
+
+    def reduce(acc, res, aux):
+        (true,) = aux
+        m = res.mapped & res.n_valid
+        c = m & (jnp.abs(res.position - true) <= vote_bin)
+        return {"mapped": acc["mapped"] + jnp.sum(m.astype(jnp.int32)),
+                "correct": acc["correct"] + jnp.sum(c.astype(jnp.int32))}
 
     return reduce
 
@@ -176,17 +203,10 @@ def serve_long(ref_len: int = 500_000, batch: int = 64, batches: int = 10,
                 ref, batch, read_len, sub_rate, seed=seed + 1 + step)
             yield reads, (jnp.asarray(starts),)
 
-    def accuracy(acc, res, aux):
-        (true,) = aux
-        m = res.mapped & res.n_valid
-        c = m & (jnp.abs(res.position - true) <= bin_)
-        return {"mapped": acc["mapped"] + jnp.sum(m.astype(jnp.int32)),
-                "correct": acc["correct"] + jnp.sum(c.astype(jnp.int32))}
-
     w_reads, w_starts = simulate_long_reads(ref, batch, read_len, sub_rate,
                                             seed=seed)
     sr = mapper.map_long_stream(
-        gen(), reduce_fn=accuracy,
+        gen(), reduce_fn=_make_vote_accuracy_reduce(bin_),
         reduce_init={"mapped": jnp.zeros((), jnp.int32),
                      "correct": jnp.zeros((), jnp.int32)},
         warmup_batch=(w_reads, (jnp.asarray(w_starts),)))
@@ -194,13 +214,109 @@ def serve_long(ref_len: int = 500_000, batch: int = 64, batches: int = 10,
     out = {
         "reads": sr.n_pairs,
         "reads_per_s": sr.pairs_per_s,
-        "mbp_per_s": sr.n_pairs * read_len / max(sr.seconds, 1e-9) / 1e6,
+        # StreamResult knows the lane's bases-per-item factor
+        # (reads_per_item=1 on the long lane), so no inline recompute.
+        "mbp_per_s": sr.mbp_per_s(read_len),
         "index_build_s": t_index,
         "loop": "stream",
         "workload": "long",
         "mapped_frac": a["mapped"] / max(sr.n_pairs, 1),
         "correct_of_mapped": a["correct"] / max(a["mapped"], 1),
         **sr.fractions,
+    }
+    if verbose:
+        print(json.dumps(out, indent=1), flush=True)
+    return out
+
+
+def serve_frontdoor(ref_len: int = 500_000, batch: int = 256,
+                    batches: int = 10, table_bits: int = 20,
+                    sub_rate: float = 1e-3, long_sub_rate: float = 0.01,
+                    read_len: int = 2000, long_frac: float = 0.2,
+                    max_queue_rows: int | None = None,
+                    deadline_s: float | None = None,
+                    pipe_cfg: PipelineConfig = PipelineConfig(),
+                    seed: int = 0, verbose: bool = True) -> dict:
+    """Bursty ragged-arrival serving through the continuous-batching
+    front door (``--loop frontdoor``).
+
+    Synthesizes a request trace the paper's target traffic looks like —
+    ragged sizes (1..batch read pairs or long reads per request), the
+    short-read and long-read lanes interleaved — and drives it through
+    `engine.frontdoor.FrontDoor` on one `Mapper` session: coalescing
+    into fixed-shape device batches, admission control, per-request
+    latency ledger, starvation-free two-lane scheduling.  The output
+    JSON reports throughput per lane next to the queue-latency
+    percentiles and the shed/reject accounting.
+    """
+    from repro.engine import FrontDoor, FrontDoorConfig
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    ref = random_reference(ref_len, rng)
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+    t_index = time.time() - t0
+    mapper = Mapper.from_index(sm, ref, pipe_cfg,
+                               ExecutionConfig(stream_batch=batch))
+
+    # Request pools are simulated up front so arrivals pay no host-side
+    # generation inside the latency-stamped serve window.
+    n_pair_rows = batch * batches
+    sim = simulate_pairs(
+        ref, n_pair_rows,
+        ReadSimConfig(read_len=pipe_cfg.read_len, sub_rate=sub_rate),
+        seed=seed)
+    n_long_rows = int(round(n_pair_rows * long_frac)) if long_frac > 0 else 0
+    if n_long_rows:
+        long_reads, _ = simulate_long_reads(ref, n_long_rows, read_len,
+                                            long_sub_rate, seed=seed + 1)
+
+    def arrivals():
+        """Ragged bursty trace: mixed small/large requests, lanes
+        interleaved, until both pools are spent."""
+        pair_off = long_off = 0
+        while pair_off < n_pair_rows or long_off < n_long_rows:
+            go_long = (long_off < n_long_rows
+                       and (pair_off >= n_pair_rows
+                            or rng.random() < long_frac))
+            # bursty size mix: mostly small requests, occasional
+            # near-batch bursts
+            hi = batch if rng.random() < 0.25 else max(2, batch // 8)
+            n = int(rng.integers(1, hi + 1))
+            if go_long:
+                n = min(n, n_long_rows - long_off)
+                yield ("long", (long_reads[long_off:long_off + n],))
+                long_off += n
+            else:
+                n = min(n, n_pair_rows - pair_off)
+                yield ("pairs", (sim.reads1[pair_off:pair_off + n],
+                                 sim.reads2[pair_off:pair_off + n]))
+                pair_off += n
+
+    fd = FrontDoor(mapper, FrontDoorConfig(
+        max_queue_rows=max_queue_rows, default_deadline_s=deadline_s))
+    try:
+        fd.warmup(long_reads=long_reads[:1] if n_long_rows else None)
+        t1 = time.time()
+        report = fd.serve(arrivals())
+        seconds = time.time() - t1
+    finally:
+        fd.close()
+
+    pair_rows = report["stage_totals"]["pairs"]["n_pairs"]
+    long_rows = report["stage_totals"].get("long", {}).get("n_reads", 0)
+    out = {
+        "loop": "frontdoor",
+        "index_build_s": t_index,
+        "seconds": seconds,
+        "pairs": pair_rows,
+        "long_reads": long_rows,
+        "pairs_per_s": pair_rows / max(seconds, 1e-9),
+        "mbp_per_s": (pair_rows * 2 * pipe_cfg.read_len
+                      + long_rows * read_len) / max(seconds, 1e-9) / 1e6,
+        **report["serve"],
+        "stage_totals": report["stage_totals"],
+        "watchdog": report["watchdog"],
     }
     if verbose:
         print(json.dumps(out, indent=1), flush=True)
@@ -334,14 +450,28 @@ def main():
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--batches", type=int, default=10)
     ap.add_argument("--table-bits", type=int, default=20)
-    ap.add_argument("--sub-rate", type=float, default=1e-3)
-    ap.add_argument("--loop", choices=("stream", "legacy"),
-                    default="stream")
+    ap.add_argument("--sub-rate", type=float, default=None,
+                    help="substitution rate; defaults per workload "
+                         "(1e-3 short pairs, PacBio-like 0.01 long)")
+    ap.add_argument("--loop", choices=("stream", "legacy", "frontdoor"),
+                    default="stream",
+                    help="host loop: pre-batched map_stream (default), "
+                         "the pre-engine baseline, or the "
+                         "continuous-batching front door (bursty ragged "
+                         "arrivals, two lanes interleaved)")
     ap.add_argument("--workload", choices=("pairs", "long"),
                     default="pairs",
                     help="short FR pairs (default) or the long-read lane")
     ap.add_argument("--read-len", type=int, default=4500,
-                    help="--workload long read length (bp)")
+                    help="long-read length (bp): --workload long and the "
+                         "frontdoor long lane")
+    ap.add_argument("--long-frac", type=float, default=0.2,
+                    help="--loop frontdoor: fraction of request traffic "
+                         "on the long-read lane")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="--loop frontdoor: per-request deadline")
+    ap.add_argument("--max-queue-rows", type=int, default=None,
+                    help="--loop frontdoor: admission-control queue bound")
     ap.add_argument("--compare", action="store_true",
                     help="run legacy + stream loops and report the speedup")
     ap.add_argument("--reps", type=int, default=3,
@@ -349,13 +479,24 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write the result JSON here (--compare artifact)")
     args = ap.parse_args()
+    # The shared flag must not clobber per-workload defaults: short pairs
+    # default 1e-3, the long lane the PacBio-like 0.01.
+    sub_rate = args.sub_rate
+    if sub_rate is None:
+        sub_rate = 0.01 if args.workload == "long" else 1e-3
     kwargs = dict(ref_len=args.ref_len, batch=args.batch,
                   batches=args.batches, table_bits=args.table_bits,
-                  sub_rate=args.sub_rate)
+                  sub_rate=sub_rate)
     if args.compare:
         compare_loops(out_path=args.out, reps=args.reps, **kwargs)
         return
-    if args.workload == "long":
+    if args.loop == "frontdoor":
+        out = serve_frontdoor(read_len=args.read_len,
+                              long_frac=args.long_frac,
+                              deadline_s=args.deadline_s,
+                              max_queue_rows=args.max_queue_rows,
+                              **kwargs)
+    elif args.workload == "long":
         out = serve_long(read_len=args.read_len, **kwargs)
     else:
         out = serve(loop=args.loop, **kwargs)

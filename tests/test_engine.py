@@ -233,6 +233,149 @@ def test_map_stream_oversized_batch_raises(world):
         mapper.map_stream(iter([(sim.reads1, sim.reads2)]))
 
 
+# ------------------------------------- stream edge cases (frontdoor) -----
+def test_map_stream_empty_iterator(world):
+    ref, sm, sim = world
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=48))
+    init = jnp.zeros((), jnp.int32)
+    sr = mapper.map_stream(iter([]), reduce_fn=lambda a, r, x: a,
+                           reduce_init=init)
+    assert sr.n_pairs == 0 and sr.n_batches == 0
+    assert sr.seconds == 0.0
+    assert all(v == 0 for v in sr.totals.values())
+    assert int(sr.reduced) == 0
+
+
+def test_map_stream_tail_batch_of_one_row(world):
+    ref, sm, sim = world
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=48))
+    seen = []
+    sr = mapper.map_stream(
+        iter([(sim.reads1[:1], sim.reads2[:1])]),
+        on_result=lambda i, res, n: seen.append((i, n, res)))
+    assert sr.n_pairs == 1 == sr.totals["n_pairs"]
+    res = seen[0][2]
+    assert res.pos1.shape[0] == 48
+    nv = np.asarray(res.n_valid)
+    assert nv[0] and not nv[1:].any()
+    from repro.engine.stream import pad_tail
+    direct = mapper.map(pad_tail(sim.reads1[:1], 48),
+                        pad_tail(sim.reads2[:1], 48))
+    np.testing.assert_array_equal(np.asarray(res.pos1)[:1],
+                                  np.asarray(direct.pos1)[:1])
+
+
+def test_map_stream_scalar_aux_leaf_through_pad_tail(world):
+    """Aux pytrees may carry 0-d (per-batch) leaves: no batch axis to
+    pad, passed through to the reduce_fn unchanged."""
+    ref, sm, sim = world
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=48))
+
+    def reduce(acc, res, aux):
+        truth, step_id = aux
+        ok = (res.pos1 != INVALID_LOC) & res.n_valid
+        return acc + step_id * jnp.sum(ok.astype(jnp.int32))
+
+    tail = 5
+    sr = mapper.map_stream(
+        iter([(sim.reads1, sim.reads2, (sim.true_start1, 1)),
+              (sim.reads1[:tail], sim.reads2[:tail],
+               (sim.true_start1[:tail], 10))]),
+        reduce_fn=reduce, reduce_init=jnp.zeros((), jnp.int32))
+    from repro.engine.stream import pad_tail
+    full = int((np.asarray(mapper.map(sim.reads1, sim.reads2).pos1)
+                != INVALID_LOC).sum())
+    head_pos = np.asarray(mapper.map(pad_tail(sim.reads1[:tail], 48),
+                                     pad_tail(sim.reads2[:tail], 48)).pos1)
+    head = int((head_pos[:tail] != INVALID_LOC).sum())
+    assert int(sr.reduced) == full + 10 * head
+
+
+# -------------------------------------------- stream bugfix regressions --
+def test_stream_result_mbp_per_s_is_lane_aware():
+    """PR-6 regression: the long lane counts single reads per item, so
+    mbp must not hardcode the pair lane's 2-mates factor."""
+    from repro.engine.stream import StreamResult
+    pairs = StreamResult(n_pairs=100, n_batches=1, seconds=2.0, totals={})
+    longs = StreamResult(n_pairs=100, n_batches=1, seconds=2.0, totals={},
+                         reads_per_item=1)
+    assert pairs.reads_per_item == 2
+    assert pairs.mbp_per_s(150) == pytest.approx(100 * 2 * 150 / 2.0 / 1e6)
+    assert longs.mbp_per_s(600) == pytest.approx(100 * 600 / 2.0 / 1e6)
+
+
+def test_map_long_stream_sets_single_read_factor(world):
+    from repro.core.simulate import simulate_long_reads
+    ref, sm, _ = world
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=4))
+    reads, _ = simulate_long_reads(ref, 4, 600, 0.01, seed=7)
+    sr = mapper.map_long_stream(iter([(reads,)]))
+    assert sr.reads_per_item == 1
+    assert sr.mbp_per_s(600) == pytest.approx(
+        sr.n_pairs * 600 / max(sr.seconds, 1e-9) / 1e6)
+    sp = mapper.map_stream(iter([(np.zeros((4, 150), np.uint8),
+                                  np.zeros((4, 150), np.uint8))]))
+    assert sp.reads_per_item == 2
+
+
+def test_fused_cache_reuses_factory_reduce_and_stays_bounded(world):
+    """PR-6 regression: a fresh reduce closure per stream recompiled the
+    fused step every call and grew the cache unboundedly.  The cached
+    factories hand back the *same* callable — one cache entry however
+    many streams — and the cache itself is a bounded LRU."""
+    from repro.core.simulate import simulate_long_reads
+    from repro.engine.mapper import _FUSED_CACHE_MAX
+    from repro.launch.serve import (
+        _make_accuracy_reduce, _make_vote_accuracy_reduce,
+    )
+    assert _make_accuracy_reduce(8) is _make_accuracy_reduce(8)
+    assert _make_vote_accuracy_reduce(64) is _make_vote_accuracy_reduce(64)
+
+    ref, sm, _ = world
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=4))
+    reads, starts = simulate_long_reads(ref, 4, 600, 0.01, seed=7)
+    init = {"mapped": jnp.zeros((), jnp.int32),
+            "correct": jnp.zeros((), jnp.int32)}
+    for _ in range(3):   # repeated serve_long-style streams: one entry
+        mapper.map_long_stream(
+            iter([(reads, (jnp.asarray(starts),))]),
+            reduce_fn=_make_vote_accuracy_reduce(64), reduce_init=init)
+    assert len(mapper._fused_cache) == 1
+    # the same (lane, reduce_fn) key returns the identical jitted step
+    step = mapper._fused_step(_make_vote_accuracy_reduce(64), "long")
+    assert step is mapper._fused_step(_make_vote_accuracy_reduce(64), "long")
+    # fresh closures (the old bug) can no longer grow the cache past the
+    # bound (jit construction is lazy, so no compiles happen here)
+    for i in range(2 * _FUSED_CACHE_MAX):
+        mapper._fused_step(lambda acc, res, aux, i=i: acc, "pairs")
+    assert len(mapper._fused_cache) <= _FUSED_CACHE_MAX
+
+
+def test_run_stream_clock_starts_at_first_dispatch(world):
+    """`StreamResult.seconds` covers first dispatch -> drain: host-side
+    generation of the *first* batch must not count (the docstring
+    contract `run_stream` used to violate)."""
+    import time as _time
+    ref, sm, sim = world
+    mapper = Mapper.from_index(sm, ref, PipelineConfig(),
+                               ExecutionConfig(stream_batch=48))
+    delay = 1.0
+
+    def gen():
+        _time.sleep(delay)       # slow host-side read generation
+        yield sim.reads1, sim.reads2
+
+    sr = mapper.map_stream(gen(),
+                           warmup_batch=(sim.reads1, sim.reads2))
+    assert sr.n_pairs == 48
+    assert sr.seconds < 0.8 * delay
+
+
 # ------------------------------------------------------------- shims -----
 def test_shims_warn_once_and_delegate(world):
     ref, sm, sim = world
