@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn, world
+from benchmarks.common import row, time_counterbalanced, world, write_bench
 from repro.core.encoding import pack_2bit
 from repro.core.light_align import gather_ref_windows, light_align
 from repro.core.pipeline import PipelineConfig
@@ -107,28 +107,33 @@ def run() -> list[dict]:
         reads2 = jnp.asarray(rng.integers(0, 4, (B, R), dtype=np.uint8))
         pos1, pos2 = _candidates(len(ref), B, C, rng)
 
-        us_unfused = time_fn(
-            lambda: _unfused(ref_j, reads1, reads2, pos1, pos2, cfg))
-        us_fused = time_fn(
-            lambda: candidate_pair_align(
-                ref_j, reads1, reads2, pos1, pos2, cfg.max_gap,
-                scoring=cfg.scoring, threshold=cfg.threshold(),
-                mode=cfg.light_mode, backend="auto"))
         ps = C // 2
-        us_fused_ps = time_fn(
-            lambda: candidate_pair_align(
+        t = time_counterbalanced({
+            "unfused": lambda: _unfused(ref_j, reads1, reads2, pos1, pos2,
+                                        cfg),
+            "fused": lambda: candidate_pair_align(
                 ref_j, reads1, reads2, pos1, pos2, cfg.max_gap,
                 scoring=cfg.scoring, threshold=cfg.threshold(),
-                mode=cfg.light_mode, prescreen_top=ps, backend="auto"))
+                mode=cfg.light_mode, backend="auto"),
+            "fused_ps": lambda: candidate_pair_align(
+                ref_j, reads1, reads2, pos1, pos2, cfg.max_gap,
+                scoring=cfg.scoring, threshold=cfg.threshold(),
+                mode=cfg.light_mode, prescreen_top=ps, backend="auto"),
+        })
+        us_unfused, us_fused = t["unfused"], t["fused"]
+        us_fused_ps = t["fused_ps"]
+        shape = f"B{B}_C{C}_R{R}_E{E}"
         hbm_mb = B * C * (R + 2 * E) / 1e6  # uint8 window tensor per mate
         rows.append(row(
-            f"cand_align_unfused_B{B}_C{C}", us_unfused,
-            window_mb_per_mate=round(hbm_mb, 2)))
+            f"cand_align_unfused_B{B}_C{C}", us_unfused, shape=shape,
+            backend="jnp", window_mb_per_mate=round(hbm_mb, 2)))
         rows.append(row(
-            f"cand_align_fused_B{B}_C{C}", us_fused,
+            f"cand_align_fused_B{B}_C{C}", us_fused, shape=shape,
+            backend="auto",
             speedup=round(us_unfused / max(us_fused, 1e-9), 3)))
         rows.append(row(
-            f"cand_align_fused_ps{ps}_B{B}_C{C}", us_fused_ps,
+            f"cand_align_fused_ps{ps}_B{B}_C{C}", us_fused_ps, shape=shape,
+            backend="auto",
             speedup=round(us_unfused / max(us_fused_ps, 1e-9), 3),
             align_frac=round(ps / C, 3)))
 
@@ -139,6 +144,8 @@ def run() -> list[dict]:
                     (time.perf_counter() - t0) * 1e6,
                     bitexact_unpacked=exact["unpacked"],
                     bitexact_packed=exact["packed"]))
+    # Perf-trajectory point for the family (run.py --gate input).
+    write_bench("cand_align", rows)
     # Hard gate, not an advisory column: a kernel/oracle divergence must
     # fail the benchmark job (run.py exits nonzero on module exceptions).
     assert exact["unpacked"] and exact["packed"], exact

@@ -1,0 +1,138 @@
+"""End-to-end `Mapper.map` / `map_stream` throughput: tuned vs default vs staged.
+
+The trajectory's missing end-to-end point (ISSUE 8): everything upstream
+benches one fused op at a time; this module runs the whole session —
+`Mapper.build`-resolved configs, pre-jitted step, stream loop — three
+ways on the same workload and batch shape:
+
+  * ``staged``  — every family forced to the staged jnp oracle, no
+    prescreen: the bit-exact reference pipeline (the C=8/no-prescreen
+    configuration the cand_align bench shows beating a naive fused
+    config);
+  * ``default`` — the hand-picked defaults (``backend="auto"``, family
+    DEFAULT_BLOCKs, prescreen off);
+  * ``tuned``   — `repro.tune.tune_session` runs first (writing the
+    cache CI uploads next to the BENCH artifacts), then
+    ``ExecutionConfig(tune=<cache>)`` resolves the winners at build.
+
+Rows report mbp/s (megabases mapped per second, both mates) and the
+ratios the CI gate enforces: ``tuned_vs_default >= 0.98`` on every
+benched shape (the autotuner must never lose to the hand-picked
+defaults beyond noise) and ``tuned_vs_staged > 1.0`` (the tuned session
+must strictly beat the staged-oracle throughput on the C=8/no-prescreen
+shape — the tuner's reason to exist).
+
+Writes ``artifacts/bench/BENCH_e2e.json``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import reads_for, row, time_counterbalanced, \
+    write_bench
+from repro.core import PipelineConfig
+from repro.engine import ExecutionConfig, Mapper
+from repro.tune import tune_session
+
+R = 150
+BATCH = 256
+N_BATCHES = 4
+STREAM_REPS = 2
+TUNE_CACHE = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "tune", "tune_cache.json")
+
+
+def _sessions():
+    ref, sm, _, sim = reads_for(300_000, BATCH * N_BATCHES, 1e-3,
+                                table_bits=19)
+    # Tune first: the winners land in the cache the tuned session (and
+    # CI's artifact upload) reads.  reps kept low — the tuner's own
+    # protocol is already counterbalanced.
+    entries = tune_session(ref, sm, batch=BATCH, reps=2, path=TUNE_CACHE)
+    ec = ExecutionConfig(stream_batch=BATCH)
+    mappers = {
+        "staged": Mapper.from_index(
+            sm, ref, PipelineConfig(light_backend="jnp",
+                                    frontend_backend="jnp",
+                                    residual_backend="jnp",
+                                    prescreen_top=0), ec),
+        "default": Mapper.from_index(sm, ref, PipelineConfig(), ec),
+        "tuned": Mapper.from_index(
+            sm, ref, PipelineConfig(),
+            ExecutionConfig(stream_batch=BATCH, tune=TUNE_CACHE)),
+    }
+    return mappers, sim, entries
+
+
+def _stream_seconds(mapper, batches) -> float:
+    t0 = time.perf_counter()
+    sr = mapper.map_stream(iter(batches))
+    dt = time.perf_counter() - t0
+    assert sr.n_pairs == BATCH * N_BATCHES
+    return dt
+
+
+def run() -> list[dict]:
+    mappers, sim, entries = _sessions()
+    r1 = sim.reads1[:BATCH]
+    r2 = sim.reads2[:BATCH]
+    batches = [(sim.reads1[i * BATCH:(i + 1) * BATCH],
+                sim.reads2[i * BATCH:(i + 1) * BATCH])
+               for i in range(N_BATCHES)]
+    shape = f"B{BATCH}_C{PipelineConfig().max_candidates}_R{R}"
+    bp_map = BATCH * 2 * R
+    bp_stream = BATCH * N_BATCHES * 2 * R
+
+    # ---- one-batch map: counterbalanced across the three sessions ------
+    t_map = time_counterbalanced(
+        {k: (lambda m=m: m.map(r1, r2)) for k, m in mappers.items()},
+        warmup=1, iters=3)
+
+    # ---- map_stream: round-robin reps over the same prebatched trace ---
+    for m in mappers.values():           # compile outside the timed reps
+        _stream_seconds(m, batches)
+    t_stream = {k: [] for k in mappers}
+    for _ in range(STREAM_REPS):
+        for k, m in mappers.items():
+            t_stream[k].append(_stream_seconds(m, batches))
+    t_stream = {k: float(np.median(v) * 1e6) for k, v in t_stream.items()}
+
+    rows = []
+    for kind, t in (("map", t_map), ("stream", t_stream)):
+        bp = bp_map if kind == "map" else bp_stream
+        for k in ("staged", "default", "tuned"):
+            derived = {"mbp_per_s": round(bp / t[k], 3)}
+            if k == "tuned":
+                derived["tuned_vs_default"] = round(
+                    t["default"] / max(t[k], 1e-9), 3)
+                derived["tuned_vs_staged"] = round(
+                    t["staged"] / max(t[k], 1e-9), 3)
+            rows.append(row(
+                f"e2e_{kind}_{k}", t[k], shape=shape,
+                backend=mappers[k].pipe_cfg.light_backend, **derived))
+
+    tuned_cfg = mappers["tuned"].pipe_cfg
+    rows.append(row(
+        "e2e_tuned_config", 0.0, shape=shape,
+        prescreen_top=tuned_cfg.prescreen(),
+        packed_ref=tuned_cfg.packed_ref,
+        light_block=tuned_cfg.light_block,
+        frontend_block=tuned_cfg.frontend_block,
+        residual_block=tuned_cfg.residual_block))
+    write_bench("e2e", rows, tune_entries=entries)
+
+    # Hard gates (ISSUE 8 acceptance): the tuned build path must never
+    # lose to the hand-picked defaults beyond noise, and must strictly
+    # beat the staged oracle on this C=8/no-prescreen shape.
+    by_name = {r["name"]: r["derived"] for r in rows}
+    assert by_name["e2e_map_tuned"]["tuned_vs_default"] >= 0.98, rows
+    assert by_name["e2e_map_tuned"]["tuned_vs_staged"] > 1.0, rows
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

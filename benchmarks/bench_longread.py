@@ -23,15 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn, world
+from benchmarks.common import row, time_pair, world, write_bench
 from repro.core.dp_fallback import gotoh_semiglobal
 from repro.core.light_align import gather_ref_windows
 from repro.core.long_read import (
@@ -47,7 +45,6 @@ from repro.core.simulate import simulate_long_reads
 
 L_READ = 4500
 N_READS = 16
-ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -99,6 +96,52 @@ def _staged(sm, ref, reads, cfg: LongReadConfig):
             dp.score)
 
 
+@functools.partial(jax.jit, static_argnames=("vote_bin",))
+def _staged_vote(diag, vote_bin):
+    """The seed repo's scatter-based run-length vote, isolated — the
+    staged baseline of the `location_vote` kernel family row."""
+    B, M = diag.shape
+    vbin = jnp.where(diag == INVALID_LOC, INVALID_LOC, diag // vote_bin)
+    sb = jnp.sort(vbin, axis=-1)
+    is_valid = sb != INVALID_LOC
+    same = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32),
+         (sb[:, 1:] == sb[:, :-1]).astype(jnp.int32)], axis=-1)
+    run_id = jnp.cumsum(1 - same, axis=-1) - 1
+    run_len = jax.vmap(
+        lambda rid, o: jnp.zeros(M, jnp.int32).at[rid].add(o)
+    )(run_id, is_valid.astype(jnp.int32))
+    best_run = jnp.argmax(run_len, axis=-1)
+    votes = jnp.take_along_axis(run_len, best_run[:, None], -1)[:, 0]
+    first_of_run = jax.vmap(
+        lambda rid, v, br: jnp.zeros(M, jnp.int32).at[rid].max(
+            jnp.where(rid == br, v, 0))
+    )(run_id, jnp.where(is_valid, sb, 0), best_run)
+    return jnp.max(first_of_run, axis=-1), votes
+
+
+def _vote_rows(cfg: LongReadConfig) -> list[dict]:
+    """Standalone `location_vote` family trajectory point: the fused
+    reduction vs the staged scatter vote on a synthetic diagonal batch."""
+    from repro.kernels.location_vote import location_vote
+
+    rng = np.random.default_rng(7)
+    B = 256
+    M = (cfg.n_segments(L_READ) - 1) * cfg.pipe.max_candidates
+    diag_np = rng.integers(0, 380_000, (B, M)).astype(np.int32)
+    diag_np[rng.random((B, M)) < 0.5] = INVALID_LOC
+    diag = jnp.asarray(diag_np)
+    us_staged, us_fused = time_pair(
+        lambda: _staged_vote(diag, cfg.vote_bin),
+        lambda: location_vote(diag, cfg.vote_bin, backend="auto"))
+    shape = f"B{B}_M{M}_bin{cfg.vote_bin}"
+    return [
+        row("location_vote_staged", us_staged, shape=shape, backend="jnp"),
+        row("location_vote_fused", us_fused, shape=shape, backend="auto",
+            speedup=round(us_staged / max(us_fused, 1e-9), 3)),
+    ]
+
+
 def _verify_bitexact(sm, ref_j, reads) -> dict:
     """The whole lane, staged-jnp vs fused-interpret, across the grid.
 
@@ -134,8 +177,9 @@ def run() -> list[dict]:
     lr = jnp.asarray(reads)
     cfg = LongReadConfig()
 
-    us_staged = time_fn(lambda: _staged(sm, ref_j, lr, cfg))
-    us_fused = time_fn(lambda: map_long_reads(sm, ref_j, lr, cfg))
+    us_staged, us_fused = time_pair(
+        lambda: _staged(sm, ref_j, lr, cfg),
+        lambda: map_long_reads(sm, ref_j, lr, cfg))
 
     sp, sv, sm_, _ = jax.block_until_ready(_staged(sm, ref_j, lr, cfg))
     res = map_long_reads(sm, ref_j, lr, cfg)
@@ -150,24 +194,23 @@ def run() -> list[dict]:
     cells = round(W / (2 * cfg.band() + 1), 2)
     speedup = round(us_staged / max(us_fused, 1e-9), 3)
     bp = N_READS * L_READ
+    shape = f"B{N_READS}_L{L_READ}_seg{cfg.segment_len}"
     rows = [
-        row("longread_staged", us_staged,
+        row("longread_staged", us_staged, shape=shape, backend="jnp",
             bp_per_us=round(bp / us_staged, 3)),
-        row("longread_fused", us_fused,
+        row("longread_fused", us_fused, shape=shape, backend="auto",
             bp_per_us=round(bp / us_fused, 3), speedup=speedup,
             dp_cell_ratio=cells, vote_parity=parity,
             mapped_correct=round(correct, 3)),
     ]
+    rows.extend(_vote_rows(cfg))
 
     t0 = time.perf_counter()
     exact = _verify_bitexact(sm, ref_j, lr)
     rows.append(row("longread_bitexact",
                     (time.perf_counter() - t0) * 1e6,
                     **{f"bitexact_{k}": v for k, v in exact.items()}))
-    os.makedirs(ART, exist_ok=True)
-    with open(os.path.join(ART, "BENCH_longread.json"), "w") as f:
-        json.dump({"bench": "longread", "rows": rows}, f, indent=1,
-                  default=str)
+    write_bench("longread", rows)
     # Hard gates: any staged/fused divergence (vote parity, the grid) or
     # a lane slower than 1.2x the seed baseline fails the benchmark job.
     assert all(exact.values()), exact

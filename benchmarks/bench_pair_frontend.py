@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn, world
+from benchmarks.common import row, time_pair, world, write_bench
 from repro.core.pair_filter import paired_adjacency_filter
 from repro.core.pipeline import PipelineConfig
 from repro.core.query import query_read_batch
@@ -92,19 +92,23 @@ def run() -> list[dict]:
         reads1 = jnp.asarray(sim.reads1)
         reads2_fwd = (3 - jnp.asarray(sim.reads2))[:, ::-1]
 
-        us_staged = time_fn(lambda: _staged(sm, reads1, reads2_fwd, cfg))
-        us_fused = time_fn(lambda: pair_frontend(
-            psm_rows, reads1, reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
-            sm.config.hash_seed, cfg.delta, cfg.max_candidates,
-            backend="auto"))
+        us_staged, us_fused = time_pair(
+            lambda: _staged(sm, reads1, reads2_fwd, cfg),
+            lambda: pair_frontend(
+                psm_rows, reads1, reads2_fwd, cfg.seed_len,
+                cfg.seeds_per_read, sm.config.hash_seed, cfg.delta,
+                cfg.max_candidates, backend="auto"))
         S = cfg.seeds_per_read
+        shape = f"B{B}_S{S}_K{K}_R{R}"
         # staged HBM intermediates per call: (B,S,K) locs + (B,S*K) starts,
         # both mates, int32
         hbm_mb = 2 * (B * S * K + B * S * K) * 4 / 1e6
         rows.append(row(f"pair_frontend_staged_B{B}_K{K}", us_staged,
+                        shape=shape, backend="jnp",
                         staged_intermediate_mb=round(hbm_mb, 2)))
         rows.append(row(
-            f"pair_frontend_fused_B{B}_K{K}", us_fused,
+            f"pair_frontend_fused_B{B}_K{K}", us_fused, shape=shape,
+            backend="auto",
             speedup=round(us_staged / max(us_fused, 1e-9), 3)))
 
     t0 = time.perf_counter()
@@ -113,6 +117,8 @@ def run() -> list[dict]:
                     (time.perf_counter() - t0) * 1e6,
                     bitexact_fused=exact["fused"],
                     bitexact_merge_filter=exact["merge_filter"]))
+    # Perf-trajectory point for the family (run.py --gate input).
+    write_bench("pair_frontend", rows)
     # Hard gate, not an advisory column: a kernel/oracle divergence must
     # fail the benchmark job (run.py exits nonzero on module exceptions).
     assert exact["fused"] and exact["merge_filter"], exact

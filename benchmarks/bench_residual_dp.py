@@ -23,15 +23,13 @@ point of the perf-trajectory series CI uploads per merge.
 from __future__ import annotations
 
 import functools
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn, world
+from benchmarks.common import row, time_pair, world, write_bench
 from repro.core.dp_fallback import gotoh_semiglobal
 from repro.core.encoding import pack_2bit
 from repro.core.light_align import gather_ref_windows
@@ -41,7 +39,6 @@ from repro.kernels.residual_dp import residual_pair_dp
 
 R = 150
 SWEEPS = [(256, 16), (1024, 16), (1024, 32)]   # (cap rows, dp_pad)
-ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 
 @functools.partial(jax.jit, static_argnames=("dp_pad",))
@@ -113,18 +110,20 @@ def run() -> list[dict]:
         band = dp_pad + cfg.max_gap
         r1, r2, p1, p2, n1, n2 = _residuals(len(ref), cap, rng)
 
-        us_staged = time_fn(
-            lambda: _staged(ref_j, r1, r2, p1, p2, dp_pad))
-        us_fused = time_fn(
+        us_staged, us_fused = time_pair(
+            lambda: _staged(ref_j, r1, r2, p1, p2, dp_pad),
             lambda: residual_pair_dp(ref_j, r1, r2, p1, p2, n1, n2, dp_pad,
                                      band=band, scoring=cfg.scoring,
                                      backend="auto"))
+        shape = f"cap{cap}_R{R}_pad{dp_pad}"
         hbm_mb = 2 * cap * W / 1e6          # uint8 window tensors per call
         cells = round(W / (2 * band + 1), 2)  # full/banded DP-cell ratio
         rows.append(row(f"residual_dp_staged_cap{cap}_pad{dp_pad}",
-                        us_staged, window_mb=round(hbm_mb, 2)))
+                        us_staged, shape=shape, backend="jnp",
+                        window_mb=round(hbm_mb, 2)))
         rows.append(row(
             f"residual_dp_fused_cap{cap}_pad{dp_pad}", us_fused,
+            shape=shape, backend="auto",
             speedup=round(us_staged / max(us_fused, 1e-9), 3),
             dp_cell_ratio=cells))
 
@@ -135,10 +134,7 @@ def run() -> list[dict]:
                         f"bitexact_{k}": v for k, v in exact.items()}))
     # Perf-trajectory point: one JSON per benchmark family, uploaded by
     # CI every merge so the fused-vs-staged ratio is tracked over PRs.
-    os.makedirs(ART, exist_ok=True)
-    with open(os.path.join(ART, "BENCH_residual_dp.json"), "w") as f:
-        json.dump({"bench": "residual_dp", "rows": rows}, f, indent=1,
-                  default=str)
+    write_bench("residual_dp", rows)
     # Hard gates, not advisory columns: a kernel/oracle divergence or a
     # fused path slower than the staged baseline on the default shape
     # must fail the benchmark job (run.py exits nonzero on exceptions).

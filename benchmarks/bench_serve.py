@@ -19,13 +19,11 @@ interpret job alongside the kernel-lane BENCH series).
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import numpy as np
 
-from benchmarks.common import reads_for, row
+from benchmarks.common import reads_for, row, write_bench
 from repro.core import PipelineConfig
 from repro.core.simulate import simulate_long_reads
 from repro.engine import ExecutionConfig, FrontDoor, FrontDoorConfig, Mapper
@@ -35,7 +33,6 @@ N_BATCHES = 8
 REPS = 3
 LONG_LEN = 2000
 N_LONG = 24
-ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 
 def _session():
@@ -131,13 +128,14 @@ def run() -> list[dict]:
     ratio = round((n_pairs / door_med) / (n_pairs / raw_med), 3)
 
     bursty = _bursty(mapper, sim, lreads)
+    shape = f"B{BATCH}_N{N_BATCHES}"
     rows = [
-        row("serve_raw_stream", raw_med * 1e6,
+        row("serve_raw_stream", raw_med * 1e6, shape=shape,
             pairs_per_s=round(n_pairs / raw_med, 1)),
-        row("serve_overhead", door_med * 1e6,
+        row("serve_overhead", door_med * 1e6, shape=shape,
             pairs_per_s=round(n_pairs / door_med, 1),
             frontdoor_vs_raw=ratio),
-        row("serve_bursty", bursty["seconds"] * 1e6,
+        row("serve_bursty", bursty["seconds"] * 1e6, shape=shape,
             pairs_per_s=round(bursty["pairs"] / bursty["seconds"], 1),
             long_reads=bursty["long_reads"],
             requests=bursty["requests"],
@@ -145,11 +143,7 @@ def run() -> list[dict]:
             p50_latency_ms=round(bursty["p50_ms"], 2),
             p99_latency_ms=round(bursty["p99_ms"], 2)),
     ]
-    os.makedirs(ART, exist_ok=True)
-    with open(os.path.join(ART, "BENCH_serve.json"), "w") as f:
-        json.dump({"bench": "serve", "rows": rows,
-                   "bursty": {k: v for k, v in bursty.items()}},
-                  f, indent=1, default=str)
+    write_bench("serve", rows, bursty={k: v for k, v in bursty.items()})
     # Hard gate: coalescing + ledger overhead must keep the front door
     # within 10% of raw map_stream on already-batched traffic.
     assert ratio >= 0.9, rows

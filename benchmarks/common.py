@@ -3,10 +3,21 @@
 Every benchmark module exposes `run() -> list[dict]`; each dict becomes a
 ``name,us_per_call,derived`` CSV row (derived = the paper-table quantity
 the row reproduces, as `key=value` pairs).
+
+Every row also carries a ``meta`` dict — ``(backend, shape, commit,
+timestamp, platform)`` — attached centrally by `row()` so the
+perf-trajectory gate (`run.py --gate`) compares like with like; the
+per-bench scripts only supply the row-specific ``shape``/``backend``.
+Candidate-vs-candidate timings should go through `time_pair` /
+`time_counterbalanced` (round-robin reps, drift hits every candidate
+alike) instead of back-to-back `time_fn` calls.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
+import subprocess
 import time
 
 import jax
@@ -18,6 +29,26 @@ from repro.core import (
     random_reference, simulate_pairs,
 )
 from repro.core.simulate import repetitive_reference
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+@functools.lru_cache(maxsize=1)
+def bench_meta() -> dict:
+    """Run-level metadata shared by every row of a benchmark process."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(__file__), capture_output=True, text=True,
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — no git is fine (tarball runs)
+        commit = "unknown"
+    return {
+        "commit": commit,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "platform": jax.default_backend(),
+        "backend_env": os.environ.get("REPRO_BACKEND", ""),
+    }
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -32,14 +63,59 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
-def row(name: str, us: float, **derived) -> dict:
-    return {"name": name, "us_per_call": us, "derived": derived}
+def time_counterbalanced(fns: dict, warmup: int = 1,
+                         iters: int = 3) -> dict:
+    """label -> median us, timed round-robin (counterbalanced).
+
+    Each rep times every candidate once before any candidate's next rep,
+    so clock drift / thermal state hits all candidates alike — the
+    protocol every fused-vs-staged (and tuned-vs-default) comparison row
+    must use for `--gate` ratios to be stable.
+    """
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    ts: dict = {k: [] for k in fns}
+    for _ in range(iters):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts[k].append(time.perf_counter() - t0)
+    return {k: float(np.median(v) * 1e6) for k, v in ts.items()}
+
+
+def time_pair(fn_a, fn_b, warmup: int = 1, iters: int = 3
+              ) -> tuple[float, float]:
+    """Counterbalanced (us_a, us_b) — the two-candidate common case."""
+    t = time_counterbalanced({"a": fn_a, "b": fn_b}, warmup, iters)
+    return t["a"], t["b"]
+
+
+def row(name: str, us: float, *, shape: str | None = None,
+        backend: str | None = None, **derived) -> dict:
+    r = {"name": name, "us_per_call": us, "derived": derived,
+         "meta": dict(bench_meta())}
+    r["meta"]["shape"] = shape
+    r["meta"]["backend"] = backend
+    return r
 
 
 def print_rows(rows: list[dict]) -> None:
     for r in rows:
         d = ";".join(f"{k}={v}" for k, v in r["derived"].items())
         print(f"{r['name']},{r['us_per_call']:.1f},{d}", flush=True)
+
+
+def write_bench(key: str, rows: list[dict], **extra) -> str:
+    """Write the family's perf-trajectory point
+    (``artifacts/bench/BENCH_<key>.json``) in the shared schema
+    `run.py --gate` consumes."""
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"BENCH_{key}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": key, "meta": bench_meta(), "rows": rows,
+                   **extra}, f, indent=1, default=str)
+    return path
 
 
 @functools.lru_cache(maxsize=4)

@@ -120,7 +120,8 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
         fe = frontend_merge_filter(
             locs1, locs2,
             seed_offsets_tuple(R, cfg.seed_len, cfg.seeds_per_read),
-            cfg.delta, cfg.max_candidates, backend=cfg.frontend_backend)
+            cfg.delta, cfg.max_candidates, block=cfg.frontend_block,
+            backend=cfg.frontend_backend)
         had_hits = (fe.n_hits1 > 0) & (fe.n_hits2 > 0)
         cands = fe
         passed = cands.n > 0
@@ -143,8 +144,9 @@ def make_genpair_serve_step(mesh: Mesh, pipe_cfg: PipelineConfig,
         pair = candidate_pair_align(
             la_ref, reads1, reads2_fwd, cands.pos1, cands.pos2,
             cfg.max_gap, scoring=cfg.scoring, threshold=cfg.threshold(),
-            mode=cfg.light_mode, prescreen_top=cfg.prescreen_top,
-            packed_ref=packed, backend=cfg.light_backend)
+            mode=cfg.light_mode, prescreen_top=cfg.prescreen(),
+            packed_ref=packed, block=cfg.light_block,
+            backend=cfg.light_backend)
         b_pos1, b_pos2 = pair.pos1, pair.pos2
         b_sc1, b_sc2 = pair.score1, pair.score2
         light_ok = passed & pair.ok1 & pair.ok2

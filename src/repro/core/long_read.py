@@ -70,6 +70,10 @@ class LongReadConfig:
     # Backend of the `location_vote` reduction ("auto" resolves through
     # kernels/backend.py, like the pipe config's per-family backends).
     vote_backend: str = "auto"
+    # Launch block for the fused vote reduction; None = the family's
+    # hand-picked `DEFAULT_BLOCK` (tune-cache fillable, like the pipe
+    # config's per-family `*_block` knobs).
+    vote_block: int | None = None
 
     def band(self) -> int:
         """Resolved anchor-DP band half-width (`dp_band` or derived)."""
@@ -215,14 +219,15 @@ def map_long_impl(
         fe = segment_pair_frontend(
             rows, reads, cfg.segment_len, cfg.segment_stride, p.seed_len,
             p.seeds_per_read, sm.config.hash_seed, delta, p.max_candidates,
-            backend=fe_backend)
+            block=p.frontend_block, backend=fe_backend)
         pos1, n_cand = fe.pos1, fe.n
 
     # -- Location Voting (fused reduction) ---------------------------------
     from repro.kernels.location_vote.ops import location_vote
 
     diag = candidate_diagonals(pos1, S - 1, cfg.segment_stride)
-    vote = location_vote(diag, cfg.vote_bin, backend=cfg.vote_backend)
+    vote = location_vote(diag, cfg.vote_bin, block=cfg.vote_block,
+                         backend=cfg.vote_backend)
     votes = vote.votes
     mapped = votes > 0
     position = vote.win_bin * cfg.vote_bin

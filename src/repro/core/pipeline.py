@@ -100,8 +100,11 @@ class PipelineConfig:
     # their summed zero-shift Hamming distance (one XOR-compare per
     # candidate — the paper's own exact-match-first logic) and run the
     # full shifted-mask alignment only on the best `prescreen_top`.
-    # 0 disables (paper-faithful baseline: align every candidate).
-    prescreen_top: int = 0
+    # 0 disables (paper-faithful baseline: align every candidate); None
+    # means "unset" — same behavior as 0, but eligible for the tune
+    # cache to fill in (`engine/config.py` resolution order: explicit
+    # config > tune cache > defaults).
+    prescreen_top: int | None = None
     # Backend for the fused candidate light-alignment op ("auto" resolves
     # to the Pallas kernel on TPU, the bit-exact jnp oracle elsewhere).
     light_backend: str = "auto"
@@ -126,6 +129,15 @@ class PipelineConfig:
     # may change scores for candidates in the outer E bases of the
     # reference.
     packed_ref: bool | None = None
+    # Per-family launch block sizes for the fused ops.  None resolves to
+    # each family's hand-picked `DEFAULT_BLOCK` inside the op; the
+    # autotuner (`repro.tune`) writes per-(backend, shape) winners into
+    # the tune cache, and `engine/config.py` threads them in here at
+    # `Mapper.build` time.  Pure launch geometry — bit-identical across
+    # values on every backend.
+    frontend_block: int | None = None   # pair_frontend / merge_filter
+    light_block: int | None = None      # candidate_align
+    residual_block: int | None = None   # residual_dp
 
     def threshold(self) -> int:
         if self.accept_threshold is not None:
@@ -141,6 +153,10 @@ class PipelineConfig:
         if self.dp_band is not None:
             return self.dp_band
         return self.dp_pad + self.max_gap
+
+    def prescreen(self) -> int:
+        """Resolved prescreen_top (`None` — unset — behaves as 0/off)."""
+        return self.prescreen_top or 0
 
     def residual_cap(self, batch: int) -> int:
         """Residual DP buffer row capacity for a ``batch``-row step.
@@ -242,8 +258,8 @@ def _best_candidate_light(
     return candidate_pair_align(
         ref, reads1, reads2, cands.pos1, cands.pos2, cfg.max_gap,
         scoring=cfg.scoring, threshold=cfg.threshold(), mode=cfg.light_mode,
-        prescreen_top=cfg.prescreen_top, packed_ref=packed,
-        backend=cfg.light_backend,
+        prescreen_top=cfg.prescreen(), packed_ref=packed,
+        block=cfg.light_block, backend=cfg.light_backend,
     )
 
 
@@ -291,13 +307,26 @@ def _residual_dp_stage(ref, reads1, reads2_fwd, pair, passed, light_ok,
     order = jnp.argsort(~needs_dp, stable=True)
     dp_idx = order[:cap]
     dp_take = needs_dp[dp_idx]
+    # Locality: re-order the selected rows by window start (mate-1
+    # position) so the fused kernel's block-granular skip and the DMA
+    # prefetch walk monotonically advancing reference windows instead of
+    # batch order; non-taken filler rows sort last.  A pure permutation
+    # of independent per-row items — WHICH rows get DP is decided above,
+    # and every result scatters back through `dp_idx`, so the stage
+    # stays bit-identical.
+    locality = jnp.argsort(
+        jnp.where(dp_take, pair.pos1[dp_idx],
+                  jnp.iinfo(jnp.int32).max), stable=True)
+    dp_idx = dp_idx[locality]
+    dp_take = dp_take[locality]
     need1 = dp_take & ~pair.ok1[dp_idx]
     need2 = dp_take & ~pair.ok2[dp_idx]
     dp = residual_pair_dp(
         ref, reads1[dp_idx], reads2_fwd[dp_idx],
         pair.pos1[dp_idx], pair.pos2[dp_idx], need1, need2,
         cfg.dp_pad, band=cfg.band(), scoring=cfg.scoring,
-        packed_ref=packed, backend=cfg.residual_backend)
+        packed_ref=packed, block=cfg.residual_block,
+        backend=cfg.residual_backend)
     # The passing mate of a re-aligned row reuses its light score.
     sc1 = jnp.where(need1, dp.score1, pair.score1[dp_idx])
     sc2 = jnp.where(need2, dp.score2, pair.score2[dp_idx])
@@ -366,7 +395,7 @@ def map_pairs_impl(
         fe = pair_frontend(
             rows, reads1, reads2_fwd, cfg.seed_len, cfg.seeds_per_read,
             sm.config.hash_seed, cfg.delta, cfg.max_candidates,
-            backend=fe_backend)
+            block=cfg.frontend_block, backend=fe_backend)
         had_hits = (fe.n_hits1 > 0) & (fe.n_hits2 > 0)
         cands = CandidateSet(pos1=fe.pos1, pos2=fe.pos2, n=fe.n)
     passed = cands.n > 0

@@ -49,6 +49,15 @@ class ExecutionConfig:
                   default `LongReadConfig` on replicated-index plans;
                   setting it on a ``shard_index`` plan raises (the lane
                   has no sharded-index step yet).
+    tune:         consult the autotuner's cache (`repro.tune`) at build.
+                  A path string names the cache file; True uses the
+                  default location; False never tunes; None (default)
+                  opts in only when the ``REPRO_TUNE_CACHE`` env var is
+                  set — so sessions stay on the hand-picked defaults
+                  (and bit-stable vs. legacy entry points) unless tuning
+                  is asked for.  Cached winners fill only knobs the
+                  configs left unset: explicit config > tune cache >
+                  defaults.
     """
 
     mesh: Mesh | None = None
@@ -60,6 +69,7 @@ class ExecutionConfig:
     backend: str | None = None
     packed_ref: bool | None = None
     long_read: LongReadConfig | None = None
+    tune: bool | str | None = None
 
     def __post_init__(self):
         if self.shard_index and self.mesh is None:
@@ -74,6 +84,7 @@ def resolved_pipeline(
     exec_cfg: ExecutionConfig | None = None,
     *,
     packed_default: bool | None = None,
+    tune_cache: dict | None = None,
 ) -> PipelineConfig:
     """Resolve every deferred `PipelineConfig` knob to a concrete value.
 
@@ -83,8 +94,18 @@ def resolved_pipeline(
     concrete bool.
     ``packed_default`` overrides the plan-derived tri-state default (the
     dry-run resolves serve-flavored configs without an ExecutionConfig).
+    ``tune_cache`` — entries from `repro.tune` (`Mapper` loads them per
+    `ExecutionConfig.tune`) — fills knobs the configs left unset
+    *before* the backend/packed resolution, so explicit settings always
+    win over cached winners.
     """
     exec_cfg = exec_cfg or ExecutionConfig()
+    if tune_cache:
+        from repro.tune import apply_tuned_pipeline
+        pipe_cfg = apply_tuned_pipeline(
+            pipe_cfg, tune_cache, batch=exec_cfg.stream_batch or 1024,
+            exec_backend=exec_cfg.backend,
+            exec_packed=exec_cfg.packed_ref)
     light = exec_cfg.backend or pipe_cfg.light_backend
     frontend = exec_cfg.backend or pipe_cfg.frontend_backend
     residual = exec_cfg.backend or pipe_cfg.residual_backend
@@ -105,6 +126,8 @@ def resolved_pipeline(
 def resolved_long_read(
     pipe_cfg: PipelineConfig,
     exec_cfg: ExecutionConfig | None = None,
+    *,
+    tune_cache: dict | None = None,
 ) -> LongReadConfig:
     """Resolve the session's long-read lane config, once, at build time.
 
@@ -119,13 +142,19 @@ def resolved_long_read(
     """
     exec_cfg = exec_cfg or ExecutionConfig()
     lr = exec_cfg.long_read or LongReadConfig()
+    if tune_cache:
+        from repro.tune import apply_tuned_long_read
+        lr = apply_tuned_long_read(
+            lr, tune_cache, batch=exec_cfg.stream_batch or 1024,
+            exec_backend=exec_cfg.backend)
     lane_pipe = dataclasses.replace(
         lr.pipe,
         max_locs_per_seed=pipe_cfg.max_locs_per_seed,
         packed_ref=pipe_cfg.packed_ref,
     )
     lane_pipe = resolved_pipeline(lane_pipe, exec_cfg,
-                                  packed_default=pipe_cfg.packed_ref)
+                                  packed_default=pipe_cfg.packed_ref,
+                                  tune_cache=tune_cache)
     vote = exec_cfg.backend or lr.vote_backend
     return dataclasses.replace(
         lr, pipe=lane_pipe,

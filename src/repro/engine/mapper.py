@@ -132,7 +132,12 @@ class Mapper:
         """
         pipe_cfg = pipe_cfg or PipelineConfig()
         exec_cfg = exec_cfg or ExecutionConfig()
-        cfg = resolved_pipeline(pipe_cfg, exec_cfg)
+        # Tune-cache winners (if any) are read once, here, and fill only
+        # knobs the configs left unset — explicit config > tune cache >
+        # hand-picked defaults (`ExecutionConfig.tune`, repro.tune).
+        from repro.tune import session_cache
+        tune_cache = session_cache(exec_cfg.tune)
+        cfg = resolved_pipeline(pipe_cfg, exec_cfg, tune_cache=tune_cache)
         ref = jnp.asarray(ref)
         packed_in = ref.dtype == jnp.uint32
         mesh = exec_cfg.mesh
@@ -182,7 +187,8 @@ class Mapper:
             raw = plan.raw_pipeline_step(cfg)
         lr_cfg = raw_long = None
         if not exec_cfg.shard_index:
-            lr_cfg = resolved_long_read(cfg, exec_cfg)
+            lr_cfg = resolved_long_read(cfg, exec_cfg,
+                                        tune_cache=tune_cache)
             raw_long = plan.raw_long_read_step(lr_cfg)
         return cls(state=state, state_shardings=shardings, raw_step=raw,
                    pipe_cfg=cfg, exec_cfg=exec_cfg, sm_config=sm.config,

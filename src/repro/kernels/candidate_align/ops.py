@@ -48,7 +48,7 @@ def candidate_pair_align(
     mode: str = "minsplit",
     prescreen_top: int = 0,
     packed_ref: bool = False,
-    block: int = DEFAULT_BLOCK,
+    block: int | None = None,
     backend: str = "auto",
 ) -> PairAlignResult:
     """Fused best-candidate Light Alignment for a batch of read pairs.
@@ -59,8 +59,13 @@ def candidate_pair_align(
     the auto choice — CI uses it to drive the whole pipeline through the
     interpret-mode kernels on CPU.  The override is read at trace time, so
     set it before the first call in a process.
+
+    ``block=None`` resolves to the hand-picked family default
+    (`DEFAULT_BLOCK`); the autotuner (`repro.tune`) threads per-shape
+    winners here through `PipelineConfig.light_block`.
     """
     backend = resolve_backend(backend, family="candidate_align")
+    block = block or DEFAULT_BLOCK
     if backend == "jnp":
         return candidate_pair_align_ref(
             ref, reads1, reads2, pos1, pos2, max_gap, scoring, threshold,

@@ -30,7 +30,7 @@ from repro.kernels.location_vote.ref import VoteResult, location_vote_ref
 def location_vote(
     diag: jnp.ndarray,       # (B, M) int32 diagonals, INVALID_LOC padded
     vote_bin: int,
-    block: int = DEFAULT_BLOCK,
+    block: int | None = None,
     backend: str = "auto",
 ) -> VoteResult:
     """Per-read diagonal-bin vote + argmax for a batch of long reads.
@@ -38,9 +38,12 @@ def location_vote(
     ``backend="auto"`` resolves through ``kernels/backend.py``
     (``REPRO_BACKEND`` honored).  The winning bin is the smallest among
     the maximally-voted bins; ``votes == 0`` (no valid candidate) pins
-    ``win_bin`` to 0 — callers map that case to INVALID_LOC.
+    ``win_bin`` to 0 — callers map that case to INVALID_LOC.  ``block=
+    None`` resolves to `DEFAULT_BLOCK`; the autotuner (`repro.tune`)
+    threads per-shape winners here through `LongReadConfig.vote_block`.
     """
     backend = resolve_backend(backend, family="location_vote")
+    block = block or DEFAULT_BLOCK
     if backend == "jnp":
         return location_vote_ref(diag, vote_bin)
 

@@ -53,7 +53,7 @@ def pair_frontend(
     hash_seed: int = 0,
     delta: int = 500,
     max_candidates: int = 8,
-    block: int = DEFAULT_BLOCK,
+    block: int | None = None,
     backend: str = "auto",
 ) -> FrontendResult:
     """Fused front end for a batch of read pairs.
@@ -62,8 +62,12 @@ def pair_frontend(
     or the in-jit CSR derivation in `core/pipeline.py`); its row width K
     caps the locations per seed.  Both reads are expected in reference
     orientation (mate 2 pre-revcomp'd, as everywhere in the pipeline).
+    ``block=None`` resolves to `DEFAULT_BLOCK`; the autotuner
+    (`repro.tune`) threads per-shape winners here through
+    `PipelineConfig.frontend_block`.
     """
     backend = resolve_backend(backend, family="pair_frontend")
+    block = block or DEFAULT_BLOCK
     if backend == "jnp":
         return pair_frontend_ref(rows, reads1, reads2, seed_len,
                                  seeds_per_read, hash_seed, delta,
@@ -114,7 +118,7 @@ def segment_pair_frontend(
     hash_seed: int = 0,
     delta: int = 500,
     max_candidates: int = 8,
-    block: int = DEFAULT_BLOCK,
+    block: int | None = None,
     backend: str = "auto",
 ) -> FrontendResult:
     """Long-read pseudo-pair front end (§4.7): segmentation as a window op
@@ -151,12 +155,13 @@ def frontend_merge_filter(
     seed_offs: tuple,        # static per-seed read offsets (S ints)
     delta: int,
     max_candidates: int,
-    block: int = DEFAULT_BLOCK,
+    block: int | None = None,
     backend: str = "auto",
 ) -> FrontendResult:
     """Fused conversion + sorted merge + Δ filter + compaction (steps 2.5-3)
     for locations already gathered by a (possibly sharded) SeedMap query."""
     backend = resolve_backend(backend, family="pair_frontend")
+    block = block or DEFAULT_BLOCK
     offs_arr = jnp.asarray(seed_offs, jnp.int32)
     if backend == "jnp":
         return merge_filter_ref(locs1, locs2, offs_arr, delta,

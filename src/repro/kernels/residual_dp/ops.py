@@ -57,7 +57,7 @@ def residual_pair_dp(
     band: int | None = None,
     scoring: Scoring = Scoring(),
     packed_ref: bool = False,
-    block: int = DEFAULT_BLOCK,
+    block: int | None = None,
     backend: str = "auto",
 ) -> ResidualDPResult:
     """Fused banded DP fallback for a compacted batch of residual pairs.
@@ -65,9 +65,12 @@ def residual_pair_dp(
     ``backend="auto"`` resolves through ``kernels/backend.py``
     (``REPRO_BACKEND`` honored).  ``band`` is the half-width around the
     window's center diagonal (``None`` or ``>= R + 2*dp_pad``: exact full
-    DP, the `gotoh_semiglobal` equivalence anchor).
+    DP, the `gotoh_semiglobal` equivalence anchor).  ``block=None``
+    resolves to `DEFAULT_BLOCK`; the autotuner (`repro.tune`) threads
+    per-shape winners here through `PipelineConfig.residual_block`.
     """
     backend = resolve_backend(backend, family="residual_dp")
+    block = block or DEFAULT_BLOCK
     need1 = need1.astype(bool)
     need2 = need2.astype(bool)
     if backend == "jnp":

@@ -311,6 +311,41 @@ def test_residual_capacity_zero_statically_skips_dp():
     assert ctr.count == 1
 
 
+def test_residual_items_dispatched_in_window_start_order(monkeypatch):
+    """ISSUE-8 satellite: `_residual_dp_stage` orders the compacted DP
+    items by mate-1 window start before the kernel dispatch (locality
+    for the kernel's window DMA), with filler rows last.  A pure
+    permutation — the parity tests above pin that results are unchanged;
+    this pins the ordering itself."""
+    from repro.kernels.residual_dp import ops as rd_ops
+
+    ref, sm, r1, r2 = _sim_world(n=32, sub=3e-2, seed=17)
+    captured = {}
+    real = rd_ops.residual_pair_dp
+
+    def spy(ref_in, reads1, reads2, pos1, pos2, need1, need2, *a, **kw):
+        captured["pos1"] = np.asarray(pos1)
+        captured["need1"] = np.asarray(need1)
+        captured["need2"] = np.asarray(need2)
+        captured["taken"] = captured["need1"] | captured["need2"]
+        return real(ref_in, reads1, reads2, pos1, pos2, need1, need2,
+                    *a, **kw)
+
+    monkeypatch.setattr(rd_ops, "residual_pair_dp", spy)
+    res = map_pairs_impl(sm, jnp.asarray(ref), r1, r2, PipelineConfig())
+    assert captured, "residual stage did not dispatch"
+    taken = captured["taken"]
+    assert taken.any(), "want real DP items in this regime"
+    # taken items first, sorted by window start; filler strictly after
+    key = np.where(taken, captured["pos1"], np.iinfo(np.int32).max)
+    assert (np.diff(key.astype(np.int64)) >= 0).all(), key
+    # and the permutation scattered back losslessly: the dp_mate ledger
+    # counts exactly the dispatched items' mates
+    dispatched = int(captured["need1"].sum() + captured["need2"].sum())
+    assert int(np.asarray(res.dp_mate1).sum()
+               + np.asarray(res.dp_mate2).sum()) == dispatched
+
+
 def test_single_mate_reuses_light_score_in_map_pairs():
     """M_DP rows where one mate's light alignment passed keep that mate's
     light score, and the dp_mate flags ledger the re-aligned mates."""
