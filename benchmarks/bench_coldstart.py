@@ -1,0 +1,92 @@
+"""Worker cold-start: `Mapper.build` from the reference vs `Mapper.load`
+from a saved index store (`engine.index_store`).
+
+The fleet-serving premise of the index store is that persisting the
+resolved session (packed ref + padded SeedMap + configs) turns worker
+cold-start from an index *construction* into an index *read*.  This
+bench measures both paths wall-clock at a serve-like shape, reports the
+store's on-disk size, and hard-gates the claim:
+
+  * ``load_vs_build >= GATE_MIN_SPEEDUP`` (3x) — the acceptance bar;
+    measured ~10-100x on CPU depending on shape;
+  * the loaded session maps bit-identically to the built one.
+
+``load_vs_build`` is a same-machine A/B ratio (counterbalanced reps), so
+it joins the `run.py --gate` trajectory columns.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import row, time_counterbalanced, write_bench
+from repro.core import (
+    PipelineConfig, ReadSimConfig, SeedMapConfig, random_reference,
+    simulate_pairs,
+)
+from repro.engine import ExecutionConfig, Mapper
+from repro.engine.index_store import store_size_bytes
+
+REF_LEN = 600_000
+TABLE_BITS = 19
+BATCH = 256
+#: hard acceptance gate: a cold start from the store must beat a build
+GATE_MIN_SPEEDUP = 3.0
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    ref = random_reference(REF_LEN, rng)
+    sm_cfg = SeedMapConfig(table_bits=TABLE_BITS)
+    pipe_cfg = PipelineConfig()
+    exec_cfg = ExecutionConfig(stream_batch=BATCH)
+
+    built = Mapper.build(ref, sm_cfg, pipe_cfg, exec_cfg)
+    store = tempfile.mkdtemp(prefix="bench_coldstart_")
+    try:
+        built.save(store)
+        store_mb = store_size_bytes(store) / 1e6
+
+        # Bit-identity first: the speedup is meaningless if the loaded
+        # session maps differently.
+        sim = simulate_pairs(ref, 32, ReadSimConfig(sub_rate=1e-3), seed=1)
+        loaded = Mapper.load(store)
+        r_b = built.map(sim.reads1, sim.reads2)
+        r_l = loaded.map(sim.reads1, sim.reads2)
+        for f in r_b._fields:
+            if not (np.asarray(getattr(r_b, f))
+                    == np.asarray(getattr(r_l, f))).all():
+                raise RuntimeError(
+                    f"coldstart gate: loaded session diverges from built "
+                    f"on MapResult.{f}")
+
+        # Candidates return a device leaf so block_until_ready has
+        # something to wait on; the work is the host-side cold start.
+        def build():
+            return Mapper.build(ref, sm_cfg, pipe_cfg, exec_cfg)._state[1]
+
+        def load():
+            return Mapper.load(store)._state[1]
+
+        t = time_counterbalanced({"build": build, "load": load},
+                                 warmup=1, iters=3)
+    finally:
+        shutil.rmtree(store, ignore_errors=True)
+
+    speedup = t["build"] / t["load"]
+    if speedup < GATE_MIN_SPEEDUP:
+        raise RuntimeError(
+            f"coldstart gate: Mapper.load only {speedup:.2f}x faster than "
+            f"Mapper.build (< {GATE_MIN_SPEEDUP}x) at L={REF_LEN}")
+    shape = f"L={REF_LEN},tb={TABLE_BITS},B={BATCH}"
+    backend = built.pipe_cfg.frontend_backend
+    rows = [
+        row("coldstart/load_vs_build", t["load"], shape=shape,
+            backend=backend, build_us=t["build"],
+            load_vs_build=speedup, store_mb=store_mb, bitexact=1,
+            layout=type(built.index).__name__),
+    ]
+    write_bench("coldstart", rows)
+    return rows

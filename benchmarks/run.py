@@ -51,6 +51,7 @@ MODULES = [
     ("residual_dp", "benchmarks.bench_residual_dp"),
     ("serve", "benchmarks.bench_serve"),
     ("e2e", "benchmarks.bench_e2e"),
+    ("coldstart", "benchmarks.bench_coldstart"),
 ]
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
@@ -64,6 +65,7 @@ GATE_RATIO_KEYS = (
     "frontdoor_vs_raw",
     "tuned_vs_default",
     "tuned_vs_staged",
+    "load_vs_build",
 )
 # Noise margin: a ratio may drop to (1 - margin) of the baseline before
 # the gate fails.  CPU CI ratios for these benches wobble ~10%; 25%

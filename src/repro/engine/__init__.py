@@ -18,6 +18,14 @@ a per-request latency ledger (`ServeStats`) and a starvation-free
 two-lane scheduler — the piece that turns the benchmark harness into a
 service front end.
 
+``engine.index_store`` is the fleet persistence layer: ``Mapper.save`` /
+``Mapper.load`` round-trip the fully resolved session (packed reference,
+padded SeedMap, resolved configs, tune snapshot) through a versioned
+checksummed on-disk store so workers cold-start without rebuilding the
+index, ``Mapper.swap_index`` / ``FrontDoor.reload_index`` hot-swap a new
+index release into a live session, and ``engine.multihost.map_stream``
+drives per-host generators through one fleet-wide SPMD dispatch.
+
 The pre-engine entry points — `core.pipeline.map_pairs` and the
 `core.distributed.make_*` factories — survive as thin deprecation shims
 over the same implementations (warn once, delegate).
@@ -26,10 +34,17 @@ from repro.core.long_read import LongReadConfig, LongReadResult
 from repro.core.pipeline import MapResult
 from repro.engine.config import ExecutionConfig
 from repro.engine.frontdoor import FrontDoor, FrontDoorConfig, Request
+from repro.engine.index_store import (
+    IndexStoreError,
+    StorePayload,
+    load_store,
+    save_store,
+)
 from repro.engine.mapper import Mapper
 from repro.engine.stats import ServeStats
 from repro.engine.stream import StreamResult
 
 __all__ = ["ExecutionConfig", "FrontDoor", "FrontDoorConfig",
-           "LongReadConfig", "LongReadResult", "MapResult", "Mapper",
-           "Request", "ServeStats", "StreamResult"]
+           "IndexStoreError", "LongReadConfig", "LongReadResult",
+           "MapResult", "Mapper", "Request", "ServeStats", "StorePayload",
+           "StreamResult", "load_store", "save_store"]

@@ -371,6 +371,32 @@ class FrontDoor:
             self.drain()
         return self.report()
 
+    def reload_index(self, store) -> str:
+        """Hot-swap the session's index at a dispatch boundary.
+
+        Quiesces exactly one boundary: the in-flight batch (dispatched
+        against the old index) is retired first, then the index swaps via
+        `Mapper.swap_index`, and every batch formed afterwards serves the
+        new index — queued requests are untouched, so no accepted request
+        is lost (the drain contract, without a drain).  A same-shape
+        store swaps under the compiled lane steps ("reused": the next
+        dispatch needs no retrace); a shape/config change rebuilds the
+        session and refreshes the lane steps ("rebuilt": next dispatch
+        recompiles); an unreadable store keeps the index already being
+        served ("kept").  Stage totals and the serving ledger accumulate
+        across the swap.
+        """
+        with self._lock:
+            prev, self._inflight = self._inflight, None
+            self._retire(prev)
+            outcome = self.mapper.swap_index(store)
+            if outcome == "rebuilt":
+                # The rebuilt session starts an empty fused-step cache;
+                # re-derive the lane steps from it.
+                self._steps = {lane: self.mapper._fused_step(None, lane)
+                               for lane in self.lanes}
+            return outcome
+
     def warmup(self, long_reads=None) -> None:
         """Compile the lane steps outside the served (latency-stamped)
         path: one all-padding batch per lane on a throwaway carry.

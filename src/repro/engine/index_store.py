@@ -1,0 +1,235 @@
+"""On-disk fleet index store: the resolved `Mapper` session, persisted.
+
+Production mappers ship a prebuilt index (BWA-MEM2's ``.idx``) because
+index construction dominates worker cold-start once alignment itself is
+fast.  This module is that artifact for the engine: ``save_store`` writes
+everything `Mapper.from_index` resolves once per session — the reference
+in its resolved flavor (uint8 bases or 2-bit packed uint32 words), the
+SeedMap in its resolved layout (CSR tables or the kernel-facing
+`PaddedSeedMap` rows), the fully *resolved* `PipelineConfig` /
+`LongReadConfig` / `SeedMapConfig`, and a tune-cache snapshot — so
+``Mapper.load`` rebuilds a bit-identical session without ever calling
+`build_seedmap`.
+
+Store layout (a directory)::
+
+    <path>/manifest.json     version, layout, configs, array catalog
+    <path>/<name>.npy        one raw payload per array (ref, rows, ...)
+
+The manifest carries a per-file sha256 so a torn copy or bit-rot is
+detected before any array is trusted; it is written last (atomic rename)
+so an interrupted ``save_store`` never leaves a store that parses.
+
+Degradation contract (the PR-8 tune-cache rule): a corrupt, stale or
+version-mismatched store must *warn and degrade*, never crash a worker.
+``load_store`` returns ``None`` on any defect (one ``warnings.warn`` with
+the reason); callers fall back — `Mapper.load` to a full ``build`` when
+given a ``fallback_ref``, `Mapper.swap_index` to keeping the index it
+already serves.  ``strict=True`` (tests, CLI debugging) raises
+`IndexStoreError` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import warnings
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.long_read import LongReadConfig
+from repro.core.pipeline import PipelineConfig
+from repro.core.scoring import Scoring
+from repro.core.seedmap import PaddedSeedMap, SeedMap, SeedMapConfig
+
+#: bump on any incompatible manifest/payload change; mismatched stores
+#: degrade (they are rebuilt from the reference, not migrated)
+STORE_VERSION = 1
+MANIFEST = "manifest.json"
+
+#: array names per index layout (the manifest's ``layout`` field)
+_LAYOUTS = {
+    "csr": ("offsets", "locations"),
+    "padded": ("rows", "counts"),
+}
+
+
+class IndexStoreError(RuntimeError):
+    """A store defect surfaced in ``strict`` mode (default: degrade)."""
+
+
+class StorePayload(NamedTuple):
+    """Everything `Mapper.from_index` needs, host-side (numpy) arrays."""
+
+    index: object                 # SeedMap | PaddedSeedMap
+    ref: np.ndarray               # uint8 bases or uint32 packed words
+    pipe_cfg: PipelineConfig      # fully resolved at save time
+    lr_cfg: LongReadConfig | None
+    sm_config: SeedMapConfig
+    tune_entries: dict
+    manifest: dict
+
+
+# ---------------------------------------------------------- config I/O --
+# Round-trip through plain dicts; reconstruction goes through the frozen
+# dataclass constructors, so a stale manifest with renamed/unknown fields
+# raises TypeError and degrades like any other defect.
+
+def _pipe_from(d: dict) -> PipelineConfig:
+    d = dict(d)
+    d["scoring"] = Scoring(**d["scoring"])
+    return PipelineConfig(**d)
+
+
+def _lr_from(d: dict) -> LongReadConfig:
+    d = dict(d)
+    d["pipe"] = _pipe_from(d["pipe"])
+    return LongReadConfig(**d)
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------- save --
+def save_store(path: str | os.PathLike, *, index, ref,
+               pipe_cfg: PipelineConfig, sm_config: SeedMapConfig,
+               lr_cfg: LongReadConfig | None = None,
+               tune_entries: dict | None = None) -> str:
+    """Persist a resolved session to the directory ``path``.
+
+    ``index`` is the session's resolved SeedMap layout (`SeedMap` or
+    `PaddedSeedMap`), ``ref`` the resolved reference flavor; both may be
+    device arrays (fetched here, once).  Returns the manifest path.
+    """
+    path = os.fspath(path)
+    os.makedirs(path, exist_ok=True)
+    if isinstance(index, PaddedSeedMap):
+        layout = "padded"
+        arrays = {"rows": index.rows, "counts": index.counts}
+    elif isinstance(index, SeedMap):
+        layout = "csr"
+        arrays = {"offsets": index.offsets, "locations": index.locations}
+    else:
+        raise TypeError(
+            f"cannot persist index of type {type(index).__name__}; "
+            "save the replicated session's SeedMap/PaddedSeedMap")
+    arrays["ref"] = ref
+
+    catalog = {}
+    for name, arr in arrays.items():
+        arr = np.asarray(arr)
+        fname = f"{name}.npy"
+        fpath = os.path.join(path, fname)
+        np.save(fpath, arr)
+        catalog[name] = {
+            "file": fname,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "sha256": _sha256(fpath),
+        }
+
+    manifest = {
+        "version": STORE_VERSION,
+        "layout": layout,
+        "seedmap_config": dataclasses.asdict(sm_config),
+        "pipeline_config": dataclasses.asdict(pipe_cfg),
+        "long_read_config": (None if lr_cfg is None
+                             else dataclasses.asdict(lr_cfg)),
+        "tune_entries": dict(tune_entries or {}),
+        "arrays": catalog,
+    }
+    # Manifest last, atomically: a store only parses once it is complete.
+    mpath = os.path.join(path, MANIFEST)
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, mpath)
+    return mpath
+
+
+# ---------------------------------------------------------------- load --
+def _load_checked(path: str) -> StorePayload:
+    mpath = os.path.join(path, MANIFEST)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if not isinstance(manifest, dict) \
+            or manifest.get("version") != STORE_VERSION:
+        raise ValueError(
+            f"expected a version-{STORE_VERSION} manifest, got "
+            f"version={manifest.get('version') if isinstance(manifest, dict) else manifest!r}")
+    layout = manifest.get("layout")
+    if layout not in _LAYOUTS:
+        raise ValueError(f"unknown index layout {layout!r}")
+    catalog = manifest["arrays"]
+    expected = _LAYOUTS[layout] + ("ref",)
+    missing = [n for n in expected if n not in catalog]
+    if missing:
+        raise ValueError(f"manifest missing arrays {missing}")
+
+    arrays = {}
+    for name in expected:
+        entry = catalog[name]
+        fpath = os.path.join(path, entry["file"])
+        digest = _sha256(fpath)
+        if digest != entry["sha256"]:
+            raise ValueError(
+                f"checksum mismatch on {entry['file']}: "
+                f"manifest {entry['sha256'][:12]}..., file {digest[:12]}...")
+        arr = np.load(fpath)
+        if str(arr.dtype) != entry["dtype"] \
+                or list(arr.shape) != list(entry["shape"]):
+            raise ValueError(
+                f"{entry['file']}: payload is {arr.dtype}{arr.shape}, "
+                f"manifest says {entry['dtype']}{tuple(entry['shape'])}")
+        arrays[name] = arr
+
+    sm_config = SeedMapConfig(**manifest["seedmap_config"])
+    pipe_cfg = _pipe_from(manifest["pipeline_config"])
+    lr_raw = manifest.get("long_read_config")
+    lr_cfg = None if lr_raw is None else _lr_from(lr_raw)
+    if layout == "padded":
+        index = PaddedSeedMap(rows=arrays["rows"], counts=arrays["counts"],
+                              config=sm_config)
+    else:
+        index = SeedMap(offsets=arrays["offsets"],
+                        locations=arrays["locations"], config=sm_config)
+    return StorePayload(index=index, ref=arrays["ref"], pipe_cfg=pipe_cfg,
+                        lr_cfg=lr_cfg, sm_config=sm_config,
+                        tune_entries=dict(manifest.get("tune_entries") or {}),
+                        manifest=manifest)
+
+
+def load_store(path: str | os.PathLike, *,
+               strict: bool = False) -> StorePayload | None:
+    """Load and verify a store; any defect warns and returns ``None``.
+
+    Verification order: manifest parse -> version -> layout -> payload
+    checksums -> dtype/shape -> config reconstruction.  ``strict=True``
+    raises `IndexStoreError` instead of degrading.
+    """
+    path = os.fspath(path)
+    try:
+        return _load_checked(path)
+    except Exception as e:  # noqa: BLE001 — any defect degrades
+        if strict:
+            raise IndexStoreError(
+                f"index store {path!r} failed verification: {e}") from e
+        warnings.warn(
+            f"ignoring unreadable index store {path!r} ({e!r}); "
+            "falling back to a full index build", stacklevel=2)
+        return None
+
+
+def store_size_bytes(path: str | os.PathLike) -> int:
+    """Total on-disk payload size (manifest + arrays) of a store."""
+    path = os.fspath(path)
+    return sum(os.path.getsize(os.path.join(path, f))
+               for f in os.listdir(path)
+               if os.path.isfile(os.path.join(path, f)))

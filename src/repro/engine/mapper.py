@@ -21,6 +21,8 @@ optional caller reduction.
 from __future__ import annotations
 
 import collections
+import dataclasses
+import os
 import warnings
 
 import jax
@@ -109,6 +111,10 @@ class Mapper:
         # LRU of fused stream steps, keyed (lane, reduce_fn), bounded at
         # `_FUSED_CACHE_MAX` — see `_fused_step`.
         self._fused_cache: collections.OrderedDict = collections.OrderedDict()
+        # Tune-cache snapshot the session resolved with (`from_index`
+        # stamps it); persisted by `save` so a loaded worker can re-save
+        # or inspect the winners its configs were resolved against.
+        self._tune_entries: dict = {}
 
     # ------------------------------------------------------------ build --
     @classmethod
@@ -121,14 +127,18 @@ class Mapper:
         return cls.from_index(sm, ref, pipe_cfg, exec_cfg)
 
     @classmethod
-    def from_index(cls, sm: SeedMap, ref,
+    def from_index(cls, sm: SeedMap | PaddedSeedMap, ref,
                    pipe_cfg: PipelineConfig | None = None,
                    exec_cfg: ExecutionConfig | None = None) -> "Mapper":
-        """Build a session from an existing CSR `SeedMap` + reference.
+        """Build a session from an existing index + reference.
 
-        ``ref`` may be the (L,) uint8 base array or the (Lw,) uint32
-        2-bit packing; whichever flavor the resolved plan needs that is
-        missing is derived here, once.
+        ``sm`` is a CSR `SeedMap` or an already-relaid `PaddedSeedMap`
+        (the index-store load path): a padded map is taken as-is and its
+        row width becomes the session's ``max_locs_per_seed`` — the two
+        flavors build bit-identical sessions.  ``ref`` may be the (L,)
+        uint8 base array or the (Lw,) uint32 2-bit packing; whichever
+        flavor the resolved plan needs that is missing is derived here,
+        once.
         """
         pipe_cfg = pipe_cfg or PipelineConfig()
         exec_cfg = exec_cfg or ExecutionConfig()
@@ -166,11 +176,18 @@ class Mapper:
                         "packed_ref resolved False but ref is uint32 words;"
                         " pass the uint8 base array")
                 ref_arr = ref
-            if isinstance(sm, PaddedSeedMap) \
-                    or cfg.frontend_backend == "jnp":
+            if isinstance(sm, PaddedSeedMap):
+                # An already-padded map is taken as-is; its row width IS
+                # the per-seed location cap, so the resolved config (and
+                # the long-read lane / tune bucket keys derived from it)
+                # must agree with it.
+                cap = int(sm.rows.shape[1])
+                if cap != cfg.max_locs_per_seed:
+                    cfg = dataclasses.replace(cfg, max_locs_per_seed=cap)
+                index = sm
+            elif cfg.frontend_backend == "jnp":
                 # The staged oracle path queries the CSR tables directly
-                # (bit-exact `map_pairs` legacy); an already-padded map is
-                # taken as-is (its row width supersedes max_locs_per_seed).
+                # (bit-exact `map_pairs` legacy).
                 index = sm
             else:
                 # Kernel front end: one host-side CSR->padded relayout at
@@ -190,9 +207,141 @@ class Mapper:
             lr_cfg = resolved_long_read(cfg, exec_cfg,
                                         tune_cache=tune_cache)
             raw_long = plan.raw_long_read_step(lr_cfg)
-        return cls(state=state, state_shardings=shardings, raw_step=raw,
-                   pipe_cfg=cfg, exec_cfg=exec_cfg, sm_config=sm.config,
-                   index=index, lr_cfg=lr_cfg, raw_long_step=raw_long)
+        mapper = cls(state=state, state_shardings=shardings, raw_step=raw,
+                     pipe_cfg=cfg, exec_cfg=exec_cfg, sm_config=sm.config,
+                     index=index, lr_cfg=lr_cfg, raw_long_step=raw_long)
+        mapper._tune_entries = dict(tune_cache or {})
+        return mapper
+
+    # ----------------------------------------------------- index store ---
+    def save(self, path) -> str:
+        """Persist the resolved session to an index store at ``path``.
+
+        Writes the versioned manifest + ``.npy`` payloads
+        (`engine.index_store`): resolved reference flavor, resolved
+        SeedMap layout, resolved pipeline / long-read / seedmap configs
+        and the session's tune-cache snapshot.  ``Mapper.load`` rebuilds
+        a bit-identical session from it without calling `build_seedmap`.
+        Returns the manifest path.
+        """
+        from repro.engine.index_store import save_store
+        if self.exec_cfg.shard_index:
+            raise NotImplementedError(
+                "saving a shard_index session is not supported; save a "
+                "replicated-plan session (CSR layout) and load the store "
+                "into the sharded ExecutionConfig instead")
+        return save_store(path, index=self.index, ref=self._state[1],
+                          pipe_cfg=self.pipe_cfg, sm_config=self.sm_config,
+                          lr_cfg=self.lr_cfg,
+                          tune_entries=self._tune_entries)
+
+    @classmethod
+    def load(cls, path, exec_cfg: ExecutionConfig | None = None, *,
+             fallback_ref=None, seedmap_cfg: SeedMapConfig | None = None,
+             pipe_cfg: PipelineConfig | None = None) -> "Mapper":
+        """Cold-start a session from a saved index store — no index build.
+
+        The store's configs are already fully resolved, so the session
+        comes up bit-identical to the one that saved it; `build_seedmap`
+        is never called.  A corrupt / stale / version-mismatched store
+        warns and degrades to a full ``Mapper.build(fallback_ref, ...)``
+        when ``fallback_ref`` is given (the never-crash-a-worker
+        contract); with no fallback an unreadable store raises
+        `IndexStoreError` — there is nothing to build from.
+
+        ``exec_cfg`` supplies the *execution* side only (mesh, stream
+        batch, donation); its ``tune=None`` default is forced to False so
+        a load-time ``REPRO_TUNE_CACHE`` env cannot re-fill knobs and
+        break bit-identity (pass an explicit ``tune=`` to opt back in),
+        and its ``long_read=None`` default adopts the store's resolved
+        lane config.
+        """
+        from repro.engine.index_store import IndexStoreError, load_store
+        payload = load_store(path)
+        if payload is None:
+            if fallback_ref is None:
+                raise IndexStoreError(
+                    f"index store {os.fspath(path)!r} is unreadable and "
+                    "no fallback_ref was provided to rebuild from")
+            warnings.warn(
+                f"index store {os.fspath(path)!r} unreadable; rebuilding "
+                "the session from the reference", stacklevel=2)
+            return cls.build(fallback_ref, seedmap_cfg, pipe_cfg, exec_cfg)
+        exec_cfg = exec_cfg or ExecutionConfig()
+        if exec_cfg.tune is None:
+            exec_cfg = dataclasses.replace(exec_cfg, tune=False)
+        if exec_cfg.long_read is None and payload.lr_cfg is not None \
+                and not exec_cfg.shard_index:
+            exec_cfg = dataclasses.replace(exec_cfg,
+                                           long_read=payload.lr_cfg)
+        mapper = cls.from_index(payload.index, payload.ref,
+                                payload.pipe_cfg, exec_cfg)
+        mapper._tune_entries = dict(payload.tune_entries)
+        return mapper
+
+    def swap_index(self, store, *, strict: bool = False) -> str:
+        """Hot-swap the device-resident index from a saved store.
+
+        Safe between stream dispatches: the session state is *passed* to
+        the jitted steps (never closed over), so a store with the same
+        array shapes/dtypes and the same resolved configs just replaces
+        ``self._state`` — every compiled step (and the fused-step cache)
+        stays valid, and the very next dispatch serves the new index.  A
+        store with different shapes or configs rebuilds the session
+        in-place with a warning (compiled steps retrace on next use; do
+        not rebuild mid-stream — `map_stream` captures its step once).
+
+        Returns ``"reused"`` (state swapped under the compiled steps),
+        ``"rebuilt"`` (full in-place re-resolution), or ``"kept"`` (the
+        store was unreadable — warned and degraded to the index already
+        being served, the never-crash-a-worker contract).
+        ``store`` may be a path or an already-loaded `StorePayload`.
+        """
+        from repro.engine.index_store import StorePayload, load_store
+        if self.exec_cfg.shard_index:
+            raise NotImplementedError(
+                "swap_index is not supported on shard_index sessions")
+        payload = (store if isinstance(store, StorePayload)
+                   else load_store(store, strict=strict))
+        if payload is None:
+            warnings.warn("swap_index: unreadable store; keeping the "
+                          "index already being served", stacklevel=2)
+            return "kept"
+        same_cfg = (payload.pipe_cfg == self.pipe_cfg
+                    and payload.sm_config == self.sm_config
+                    and payload.lr_cfg == self.lr_cfg
+                    and type(payload.index) is type(self.index))
+        old_leaves = jax.tree.leaves((self.index, self._state[1]))
+        new_leaves = jax.tree.leaves((payload.index, payload.ref))
+        same_shapes = same_cfg and len(old_leaves) == len(new_leaves) \
+            and all(np.asarray(o).shape == np.asarray(n).shape
+                    and np.asarray(o).dtype == np.asarray(n).dtype
+                    for o, n in zip(old_leaves, new_leaves))
+        if same_shapes:
+            new_index = jax.tree.map(jnp.asarray, payload.index)
+            new_ref = jnp.asarray(payload.ref)
+            if self.exec_cfg.mesh is not None:
+                repl = NamedSharding(self.exec_cfg.mesh, P())
+                new_index = jax.device_put(new_index, repl)
+                new_ref = jax.device_put(new_ref, repl)
+            self._state = (new_index, new_ref)
+            self.index = new_index
+            return "reused"
+        warnings.warn(
+            "swap_index: store differs in shape or config from the live "
+            "session; rebuilding in place (compiled steps retrace on "
+            "next use)", stacklevel=2)
+        exec_cfg = self.exec_cfg
+        if exec_cfg.tune is None:
+            exec_cfg = dataclasses.replace(exec_cfg, tune=False)
+        if payload.lr_cfg is not None:
+            exec_cfg = dataclasses.replace(exec_cfg,
+                                           long_read=payload.lr_cfg)
+        fresh = Mapper.from_index(payload.index, payload.ref,
+                                  payload.pipe_cfg, exec_cfg)
+        fresh._tune_entries = dict(payload.tune_entries)
+        self.__dict__.update(fresh.__dict__)
+        return "rebuilt"
 
     # ------------------------------------------------------------- run ---
     def map(self, reads1, reads2) -> MapResult:

@@ -1,0 +1,226 @@
+"""Multi-host `map_stream`: per-host generators, one global fused dispatch.
+
+A serve fleet runs one jax program per host (`jax.distributed.initialize`
+with a shared coordinator), each host pulling reads from its *own* source
+— a shard of the FASTQ, its slice of the request queue.  This module
+assembles those per-host batches into global arrays with
+``jax.make_array_from_process_local_data`` and drives the session's
+fused stream step over them, so the whole fleet executes one SPMD
+dispatch per batch against the replicated index.
+
+Contract differences vs the single-host loop (`Mapper.map_stream`):
+
+  * **shape** — ``ExecutionConfig.stream_batch`` is the *global* batch;
+    every host contributes ``stream_batch / process_count`` rows (the
+    first batch fixes the split when ``stream_batch`` is None).
+  * **tails** — each host pads its own ragged tail, so padding sits
+    *inside* the global batch (per-shard), not at its end.  The fused
+    step therefore takes a (B,) per-row validity mask instead of the
+    scalar leading-rows count (`plan._mask_tail` handles both ranks).
+  * **lockstep** — every host must yield the same number of batches:
+    each dispatch is a collective program, and a host that stops early
+    deadlocks the rest.  Pad trailing all-invalid batches on hosts that
+    run out of reads.
+  * **stats** — the device-side stage totals are computed on the global
+    batch and replicated, so every host's `StreamResult` is identical;
+    gate host-side reporting with `process_index` / `log0`.
+
+When ``jax.process_count() == 1`` the call degrades to the single-host
+``Mapper._stream`` loop — same results, same `StreamResult` — so code
+written against this entry point runs unchanged in a single-controller
+dev session (pinned by tests/test_index_store.py; the two-process CPU
+bit-identity check lives in tests/_multihost_worker.py).
+"""
+from __future__ import annotations
+
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.engine.mapper import _DONATE_MSG, Mapper
+from repro.engine.stats import fetch_stage_totals, init_stage_totals
+from repro.engine.stream import StreamResult, pad_tail, split_batch
+
+#: the denominator stat key per lane — already a device-side sum of the
+#: global ``n_valid`` mask, so it doubles as the fleet-wide item count
+_DENOM = {"pairs": "n_pairs", "long": "n_reads"}
+
+
+def process_count() -> int:
+    return jax.process_count()
+
+
+def process_index() -> int:
+    return jax.process_index()
+
+
+def is_coordinator() -> bool:
+    """True on exactly one host (process 0) — gate logging/reporting."""
+    return jax.process_index() == 0
+
+
+def log0(*args, **kwargs) -> None:
+    """`print`, on the coordinator only."""
+    if is_coordinator():
+        print(*args, **kwargs)
+
+
+def _global_batch_arrays(mesh, batch_axes, local_arrays):
+    """Per-host (b, ...) numpy arrays -> global (B, ...) jax arrays.
+
+    The global shape is derived by `make_array_from_process_local_data`
+    from the local shape and the batch sharding (b * process_count rows
+    over the ``batch_axes`` mesh axes).
+    """
+    spec = NamedSharding(mesh, P(batch_axes))
+    return tuple(
+        jax.make_array_from_process_local_data(spec, np.asarray(a))
+        for a in local_arrays)
+
+
+def _global_aux(mesh, batch_axes, aux, local_batch):
+    """Assemble an aux pytree: batch-leading leaves shard, 0-d leaves
+    replicate (they must be equal on every host)."""
+    spec = NamedSharding(mesh, P(batch_axes))
+    repl = NamedSharding(mesh, P())
+
+    def put(a):
+        a = np.asarray(a)
+        if a.ndim == 0:
+            return jax.device_put(a, repl)
+        return jax.make_array_from_process_local_data(
+            spec, pad_tail(a, local_batch))
+
+    return jax.tree.map(put, aux)
+
+
+def _fused_masked_step(mapper: Mapper, reduce_fn, lane: str):
+    """The multi-host twin of `Mapper._fused_step`: same fused body, but
+    the tail argument is a (B,) validity mask and the jit carries no
+    explicit in_shardings — the committed global inputs fix the
+    placement, and a batch-length mask must follow the batch sharding,
+    not the single-host step's replicated-``n`` slot.  Cached in the
+    session's bounded fused-step LRU under a multihost-tagged key.
+    """
+    key = ("multihost", lane, reduce_fn)
+    if key in mapper._fused_cache:
+        mapper._fused_cache.move_to_end(key)
+        return mapper._fused_cache[key]
+    raw_attr, counts_fn, keys, n_arrays = mapper._LANES[lane]
+    raw = getattr(mapper, raw_attr)
+
+    def fused(state, carry, *rest):
+        *reads, mask, aux = rest
+        res = raw(*state, *reads, mask)
+        totals, red = carry
+        counts = counts_fn(res)
+        totals = {k: totals[k] + counts[k] for k in keys}
+        if reduce_fn is not None:
+            red = reduce_fn(red, res, aux)
+        return res, (totals, red)
+
+    donate = (1,) + (tuple(range(2, 2 + n_arrays))
+                     if mapper.exec_cfg.donate_reads else ())
+    step = jax.jit(fused, donate_argnums=donate)
+    mapper._fused_cache[key] = step
+    from repro.engine.mapper import _FUSED_CACHE_MAX
+    while len(mapper._fused_cache) > _FUSED_CACHE_MAX:
+        mapper._fused_cache.popitem(last=False)
+    return step
+
+
+def map_stream(mapper: Mapper, batches, *, lane: str = "pairs",
+               on_result=None, reduce_fn=None, reduce_init=None,
+               warmup_batch=None) -> StreamResult:
+    """Stream this host's batches through the fleet-wide fused step.
+
+    ``batches`` yields this *host's* ``(*reads[, aux])`` items (the
+    single-host `map_stream` item contract, at the per-host batch
+    shape).  ``reduce_fn`` / ``reduce_init`` / ``warmup_batch`` /
+    ``on_result`` behave as on `Mapper.map_stream`; ``on_result`` sees
+    the *global* result array (read its addressable shards host-side).
+    ``lane`` selects "pairs" or "long".  Returns the same `StreamResult`
+    on every host: ``n_pairs`` is the fleet-wide valid-item total
+    (fetched from the device-side denominator stat, which sums the
+    global validity mask).
+    """
+    if jax.process_count() == 1:
+        # Single-controller degradation: today's single-host loop,
+        # bit-identically (same fused step, scalar-n tail masking).
+        return mapper._stream(lane, batches, on_result, reduce_fn,
+                              reduce_init, warmup_batch)
+    mesh = mapper.exec_cfg.mesh
+    if mesh is None:
+        raise ValueError(
+            "multi-host map_stream needs ExecutionConfig(mesh=...) over "
+            "the fleet's devices")
+    if mapper.exec_cfg.shard_index:
+        raise NotImplementedError(
+            "multi-host map_stream serves the replicated-index plan; "
+            "shard_index sessions are single-controller only")
+    _, _, keys, n_arrays = mapper._LANES[lane]
+    axes = mapper.exec_cfg.batch_axes
+    n_proc = jax.process_count()
+    local_batch = None
+    if mapper.exec_cfg.stream_batch is not None:
+        if mapper.exec_cfg.stream_batch % n_proc:
+            raise ValueError(
+                f"stream_batch={mapper.exec_cfg.stream_batch} must divide "
+                f"evenly over {n_proc} processes")
+        local_batch = mapper.exec_cfg.stream_batch // n_proc
+    step = _fused_masked_step(mapper, reduce_fn, lane)
+    repl = NamedSharding(mesh, P())
+    carry = jax.device_put(
+        (init_stage_totals(keys), jax.tree.map(jnp.copy, reduce_init)),
+        repl)
+
+    def assemble(item):
+        nonlocal local_batch
+        reads, aux = split_batch(item, n_arrays)
+        local_n = int(np.asarray(reads[0]).shape[0])
+        if local_batch is None:
+            local_batch = local_n
+        g_reads = _global_batch_arrays(
+            mesh, axes, (pad_tail(np.asarray(r), local_batch)
+                         for r in reads))
+        mask = np.arange(local_batch, dtype=np.int32) < local_n
+        (g_mask,) = _global_batch_arrays(mesh, axes, (mask,))
+        g_aux = _global_aux(mesh, axes, aux, local_batch)
+        return g_reads, g_mask, g_aux
+
+    n_batches = 0
+    prev = res = None
+    t0 = None
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=_DONATE_MSG,
+                                category=UserWarning)
+        if warmup_batch is not None:
+            g_reads, g_mask, g_aux = assemble(warmup_batch)
+            scrap = jax.tree.map(jnp.copy, carry)
+            _, scrap = step(mapper._state, scrap, *g_reads, g_mask, g_aux)
+            jax.block_until_ready(scrap)
+        for idx, item in enumerate(batches):
+            g_reads, g_mask, g_aux = assemble(item)
+            if t0 is None:
+                t0 = time.time()
+            res, carry = step(mapper._state, carry, *g_reads, g_mask,
+                              g_aux)
+            n_batches += 1
+            if prev is not None and on_result is not None:
+                on_result(*prev)
+            prev = (idx, res, g_mask)
+        if prev is not None and on_result is not None:
+            on_result(*prev)
+        if res is not None:
+            jax.block_until_ready(res)
+    seconds = 0.0 if t0 is None else time.time() - t0
+    totals, reduced = carry
+    totals = fetch_stage_totals(totals)
+    return StreamResult(n_pairs=totals.get(_DENOM[lane], 0),
+                        n_batches=n_batches, seconds=seconds,
+                        totals=totals, reduced=reduced,
+                        reads_per_item=n_arrays)

@@ -32,11 +32,18 @@ from repro.core.seedmap import SeedMapConfig
 
 
 def _mask_tail(res, n: jnp.ndarray):
-    """Set a step result's ``n_valid`` to the leading-rows mask.
+    """Set a step result's ``n_valid`` from the step's ``n`` argument.
 
     Works for any result NamedTuple with a (B,) ``n_valid`` field
-    (`MapResult`, `LongReadResult`).
+    (`MapResult`, `LongReadResult`).  ``n`` is either the scalar count of
+    valid *leading* rows (the single-host stream contract) or a (B,)
+    per-row validity mask — the multi-host path, where each host's tail
+    padding sits inside its own shard of the global batch, so validity is
+    not a global prefix (`engine.multihost`).  The rank check is static
+    at trace time: the two flavors compile to distinct steps.
     """
+    if getattr(n, "ndim", 0) == 1:
+        return res._replace(n_valid=n.astype(bool))
     B = res.n_valid.shape[0]
     return res._replace(n_valid=jnp.arange(B, dtype=jnp.int32) < n)
 

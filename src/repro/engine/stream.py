@@ -120,7 +120,12 @@ def run_stream(dispatch, batches, *, stream_batch=None,
     t0 = None
     for idx, item in enumerate(batches):
         reads, aux = split_batch(item, n_arrays)
-        n = int(np.asarray(reads[0]).shape[0])
+        # Shape only — never np.asarray here: a multi-host global array
+        # is not fully addressable, and materializing a device array
+        # just for its row count would force a sync anyway.
+        r0 = reads[0]
+        n = int(r0.shape[0]) if hasattr(r0, "shape") \
+            else int(np.asarray(r0).shape[0])
         if stream_batch is None:
             stream_batch = n
         padded = tuple(pad_tail(r, stream_batch) for r in reads)

@@ -107,15 +107,40 @@ def _make_vote_accuracy_reduce(vote_bin: int):
     return reduce
 
 
+def _session_from_store(index_path, ref, table_bits, pipe_cfg, exec_cfg,
+                        ) -> tuple[Mapper, float]:
+    """Cold-start a serve session from a saved index store.
+
+    Returns ``(mapper, seconds_to_ready)``.  An unreadable store warns
+    and degrades to a full ``Mapper.build`` on the driver's reference —
+    the worker comes up either way (`Mapper.load`'s fallback contract).
+    """
+    t0 = time.time()
+    mapper = Mapper.load(index_path, exec_cfg, fallback_ref=ref,
+                         seedmap_cfg=SeedMapConfig(table_bits=table_bits),
+                         pipe_cfg=pipe_cfg)
+    return mapper, time.time() - t0
+
+
 def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
           table_bits: int = 20, sub_rate: float = 1e-3,
           pipe_cfg: PipelineConfig = PipelineConfig(),
-          seed: int = 0, verbose: bool = True, loop: str = "stream") -> dict:
+          seed: int = 0, verbose: bool = True, loop: str = "stream",
+          index_path: str | None = None) -> dict:
     rng = np.random.default_rng(seed)
     t0 = time.time()
     ref = random_reference(ref_len, rng)
-    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
-    t_index = time.time() - t0
+    mapper = sm = None
+    if index_path is not None:
+        if loop == "legacy":
+            raise ValueError("--index serves through the engine session; "
+                             "the legacy loop has no store path")
+        mapper, t_index = _session_from_store(
+            index_path, ref, table_bits, pipe_cfg,
+            ExecutionConfig(stream_batch=batch))
+    else:
+        sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+        t_index = time.time() - t0
 
     stream = ReadStreamConfig(batch=batch, read_len=pipe_cfg.read_len,
                               seed=seed)
@@ -126,7 +151,7 @@ def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
                             pipe_cfg, t_index)
     elif loop == "stream":
         out = _serve_stream(ref, sm, stream, sim_cfg, batch, batches,
-                            pipe_cfg, t_index)
+                            pipe_cfg, t_index, mapper=mapper)
     else:
         raise ValueError(f"unknown loop {loop!r}; expected stream|legacy")
     if verbose:
@@ -178,7 +203,8 @@ def serve_long(ref_len: int = 500_000, batch: int = 64, batches: int = 10,
                table_bits: int = 20, read_len: int = 4500,
                sub_rate: float = 0.01,
                lr_cfg: LongReadConfig = LongReadConfig(),
-               seed: int = 0, verbose: bool = True) -> dict:
+               seed: int = 0, verbose: bool = True,
+               index_path: str | None = None) -> dict:
     """The long-read serve workload (``--workload long``).
 
     Same shape as the pair loop: offline index + session build (the
@@ -190,11 +216,14 @@ def serve_long(ref_len: int = 500_000, batch: int = 64, batches: int = 10,
     rng = np.random.default_rng(seed)
     t0 = time.time()
     ref = random_reference(ref_len, rng)
-    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
-    t_index = time.time() - t0
-    mapper = Mapper.from_index(
-        sm, ref, lr_cfg.pipe,
-        ExecutionConfig(stream_batch=batch, long_read=lr_cfg))
+    exec_cfg = ExecutionConfig(stream_batch=batch, long_read=lr_cfg)
+    if index_path is not None:
+        mapper, t_index = _session_from_store(index_path, ref, table_bits,
+                                              lr_cfg.pipe, exec_cfg)
+    else:
+        sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+        t_index = time.time() - t0
+        mapper = Mapper.from_index(sm, ref, lr_cfg.pipe, exec_cfg)
     bin_ = mapper.lr_cfg.vote_bin
 
     def gen():
@@ -236,7 +265,8 @@ def serve_frontdoor(ref_len: int = 500_000, batch: int = 256,
                     max_queue_rows: int | None = None,
                     deadline_s: float | None = None,
                     pipe_cfg: PipelineConfig = PipelineConfig(),
-                    seed: int = 0, verbose: bool = True) -> dict:
+                    seed: int = 0, verbose: bool = True,
+                    index_path: str | None = None) -> dict:
     """Bursty ragged-arrival serving through the continuous-batching
     front door (``--loop frontdoor``).
 
@@ -254,10 +284,15 @@ def serve_frontdoor(ref_len: int = 500_000, batch: int = 256,
     rng = np.random.default_rng(seed)
     t0 = time.time()
     ref = random_reference(ref_len, rng)
-    sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
-    t_index = time.time() - t0
-    mapper = Mapper.from_index(sm, ref, pipe_cfg,
-                               ExecutionConfig(stream_batch=batch))
+    if index_path is not None:
+        mapper, t_index = _session_from_store(
+            index_path, ref, table_bits, pipe_cfg,
+            ExecutionConfig(stream_batch=batch))
+    else:
+        sm = build_seedmap(ref, SeedMapConfig(table_bits=table_bits))
+        t_index = time.time() - t0
+        mapper = Mapper.from_index(sm, ref, pipe_cfg,
+                                   ExecutionConfig(stream_batch=batch))
 
     # Request pools are simulated up front so arrivals pay no host-side
     # generation inside the latency-stamped serve window.
@@ -444,6 +479,39 @@ def compare_loops(out_path: str | None = None, reps: int = 3,
     return result
 
 
+def save_index(path: str, ref_len: int = 500_000, batch: int = 512,
+               table_bits: int = 20, sub_rate: float = 1e-3,
+               pipe_cfg: PipelineConfig = PipelineConfig(),
+               seed: int = 0, verbose: bool = True, **_ignored) -> dict:
+    """``--save-index``: build the session once and persist its store.
+
+    The store carries the *resolved* session (index layout, reference
+    flavor, configs), so a later ``--index`` serve of the same shapes
+    cold-starts without `build_seedmap` and maps bit-identically.
+    """
+    from repro.engine.index_store import store_size_bytes
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    ref = random_reference(ref_len, rng)
+    mapper = Mapper.build(ref, SeedMapConfig(table_bits=table_bits),
+                          pipe_cfg, ExecutionConfig(stream_batch=batch))
+    t_build = time.time() - t0
+    t0 = time.time()
+    manifest = mapper.save(path)
+    out = {
+        "store": path,
+        "manifest": manifest,
+        "index_build_s": t_build,
+        "save_s": time.time() - t0,
+        "store_mb": store_size_bytes(path) / 1e6,
+        "layout": type(mapper.index).__name__,
+    }
+    if verbose:
+        print(json.dumps(out, indent=1), flush=True)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ref-len", type=int, default=500_000)
@@ -478,6 +546,14 @@ def main():
                     help="--compare repetitions (median of per-rep ratios)")
     ap.add_argument("--out", default=None,
                     help="write the result JSON here (--compare artifact)")
+    ap.add_argument("--save-index", default=None, metavar="PATH",
+                    help="build the index + session, persist the store "
+                         "to PATH (engine.index_store) and exit")
+    ap.add_argument("--index", default=None, metavar="PATH",
+                    help="serve from a saved index store instead of "
+                         "rebuilding (composes with --loop frontdoor and "
+                         "--workload long; unreadable stores degrade to "
+                         "a full build)")
     args = ap.parse_args()
     # The shared flag must not clobber per-workload defaults: short pairs
     # default 1e-3, the long lane the PacBio-like 0.01.
@@ -487,6 +563,13 @@ def main():
     kwargs = dict(ref_len=args.ref_len, batch=args.batch,
                   batches=args.batches, table_bits=args.table_bits,
                   sub_rate=sub_rate)
+    if args.save_index:
+        out = save_index(args.save_index, **kwargs)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=1)
+        return
     if args.compare:
         compare_loops(out_path=args.out, reps=args.reps, **kwargs)
         return
@@ -495,11 +578,13 @@ def main():
                               long_frac=args.long_frac,
                               deadline_s=args.deadline_s,
                               max_queue_rows=args.max_queue_rows,
+                              index_path=args.index,
                               **kwargs)
     elif args.workload == "long":
-        out = serve_long(read_len=args.read_len, **kwargs)
+        out = serve_long(read_len=args.read_len, index_path=args.index,
+                         **kwargs)
     else:
-        out = serve(loop=args.loop, **kwargs)
+        out = serve(loop=args.loop, index_path=args.index, **kwargs)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

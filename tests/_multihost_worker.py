@@ -1,0 +1,133 @@
+"""Two-process multi-host worker for tests/test_multihost.py.
+
+Launched twice (process_id 0 and 1) against a shared local coordinator,
+each process owning one CPU device via the gloo collectives backend —
+the smallest real multi-controller fleet.  Both processes build the
+identical world (same seeds), then stream *disjoint* per-host batch
+slices through `engine.multihost.map_stream`; the single-device session
+on the same global rows is the bit-identity reference.  Asserts:
+
+  1. jax.distributed came up: 2 processes, 2 global devices, 1 local;
+  2. every result field of the global fused dispatch is bit-identical,
+     per addressable shard, to the single-device reference session on
+     the same rows (data assembled via make_array_from_process_local_data);
+  3. a ragged tail on one host only is masked *per shard* — validity is
+     not a global prefix — and `n_valid` matches the expected mask;
+  4. the device-side stage totals equal the mask-adjusted single-device
+     counts, and `StreamResult.n_pairs` is the fleet-wide valid total.
+
+Prints ``SKIP: <reason>`` and exits 0 when the environment cannot run
+multi-process CPU jax (no gloo / no distributed init) — the parent test
+skips instead of failing.  Exit 0 with 4 ``ok:`` lines = passed.
+"""
+import sys
+
+
+def main():
+    pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+    import jax
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception as e:  # noqa: BLE001 — absent backend is a skip
+        print(f"SKIP: no cpu collectives config ({e!r})")
+        return
+    try:
+        jax.distributed.initialize(
+            coordinator_address=f"localhost:{port}",
+            num_processes=nproc, process_id=pid)
+    except Exception as e:  # noqa: BLE001 — env without gloo support
+        print(f"SKIP: jax.distributed.initialize failed ({e!r})")
+        return
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import (
+        PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
+        random_reference, simulate_pairs, stage_stat_counts,
+    )
+    from repro.engine import ExecutionConfig, Mapper
+    from repro.engine import multihost
+
+    assert jax.process_count() == nproc, jax.process_count()
+    assert len(jax.devices()) == nproc, jax.devices()
+    assert len(jax.local_devices()) == 1, jax.local_devices()
+    print(f"ok: distributed init ({nproc} processes, "
+          f"{len(jax.devices())} devices)")
+
+    # Identical world on both hosts (same seeds); each host streams its
+    # own disjoint slice of the 29-pair pool.
+    rng = np.random.default_rng(0)
+    ref = random_reference(60_000, rng)
+    cfg = PipelineConfig()
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=15))
+    sim = simulate_pairs(ref, 29, ReadSimConfig(sub_rate=2e-3), seed=1)
+
+    local_b = 8               # global stream batch = 16 over 2 hosts
+    # host slices: batch 0 full on both; batch 1 ragged (5 rows) on host 1
+    slices = {0: [(0, 8), (8, 16)], 1: [(16, 24), (24, 29)]}
+
+    def batches():
+        for lo, hi in slices[pid]:
+            yield sim.reads1[lo:hi], sim.reads2[lo:hi]
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    mapper = Mapper.from_index(
+        sm, ref, cfg,
+        ExecutionConfig(mesh=mesh, stream_batch=2 * local_b))
+
+    collected = {}
+    sr = multihost.map_stream(mapper, batches(),
+                              on_result=lambda i, res, mask:
+                              collected.__setitem__(i, (res, mask)))
+
+    # Single-device reference session on the exact global row content
+    # (host-1 tail zero-padded like the stream pads it).
+    m_ref = Mapper.from_index(sm, ref, cfg)
+    pad = np.zeros((3, sim.reads1.shape[1]), sim.reads1.dtype)
+    global_rows = [
+        (np.concatenate([sim.reads1[0:8], sim.reads1[16:24]]),
+         np.concatenate([sim.reads2[0:8], sim.reads2[16:24]]),
+         np.ones(16, bool)),
+        (np.concatenate([sim.reads1[8:16], sim.reads1[24:29], pad]),
+         np.concatenate([sim.reads2[8:16], sim.reads2[24:29],
+                         np.zeros_like(pad)]),
+         np.arange(16) < 13),
+    ]
+    want_totals = None
+    for idx, (r1, r2, mask) in enumerate(global_rows):
+        # batch 1's mask is NOT a prefix once shard-ordered: host 0's 8
+        # rows are valid, host 1 contributes 5 valid + 3 padding.
+        res, gmask = collected[idx]
+        ref_res = m_ref.map(r1, r2)
+        for f in res._fields:
+            arr = getattr(res, f)
+            shard = arr.addressable_shards[0]
+            lo = shard.index[0].start or 0
+            got = np.asarray(shard.data)
+            if f == "n_valid":
+                np.testing.assert_array_equal(
+                    got, mask[lo:lo + got.shape[0]], err_msg=f"batch{idx}")
+            else:
+                np.testing.assert_array_equal(
+                    got, np.asarray(getattr(ref_res, f))[lo:lo + got.shape[0]],
+                    err_msg=f"batch{idx}.{f}")
+        masked = ref_res._replace(n_valid=np.asarray(mask))
+        counts = {k: int(v) for k, v in stage_stat_counts(masked).items()}
+        want_totals = (counts if want_totals is None else
+                       {k: want_totals[k] + counts[k] for k in counts})
+    print("ok: global fused dispatch bit-identical per shard vs "
+          "single-device reference")
+    print("ok: per-shard ragged tail mask (non-prefix validity) correct")
+
+    assert sr.totals == want_totals, (sr.totals, want_totals)
+    assert sr.n_pairs == 29, sr.n_pairs
+    assert sr.n_batches == 2, sr.n_batches
+    if multihost.is_coordinator():
+        multihost.log0(f"coordinator report: {sr.totals}")
+    print("ok: device-side totals == mask-adjusted reference; "
+          "n_pairs is the fleet total")
+
+
+if __name__ == "__main__":
+    main()

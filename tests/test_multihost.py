@@ -1,0 +1,54 @@
+"""Two-process multi-host `map_stream` integration test.
+
+Each worker is a separate jax *process* (its own runtime, one CPU device,
+gloo collectives) — the real multi-controller topology, not the 8-fake-
+device single-process setup of tests/test_distributed.py.  The workers
+must run concurrently (every dispatch is a collective), so both are
+launched and then joined.  Workers print ``SKIP: <reason>`` when the
+environment lacks multi-process CPU support; the test skips with them.
+"""
+import os
+import socket
+import subprocess
+import sys
+
+import pytest
+
+N_PROC = 2
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+@pytest.mark.timeout(600)
+def test_multihost_stream_matches_single_host():
+    worker = os.path.join(os.path.dirname(__file__), "_multihost_worker.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    port = str(_free_port())
+    procs = [
+        subprocess.Popen(
+            [sys.executable, worker, str(pid), str(N_PROC), port],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True)
+        for pid in range(N_PROC)
+    ]
+    outs = []
+    try:
+        for p in procs:
+            out, err = p.communicate(timeout=540)
+            outs.append((p.returncode, out, err))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for rc, out, err in outs:
+        assert rc == 0, f"stdout:\n{out}\nstderr:\n{err}"
+    if any("SKIP:" in out for _, out, _ in outs):
+        pytest.skip("multi-process CPU jax unavailable: "
+                    + next(o for _, o, _ in outs if "SKIP:" in o).strip())
+    for rc, out, err in outs:
+        assert out.count("ok:") == 4, f"stdout:\n{out}\nstderr:\n{err}"
