@@ -171,6 +171,7 @@ class FrontDoor:
         self._inflight = None        # (lane, res, spans, t_dispatch)
         self._deferred = 0           # pair batches served past a long backlog
         self._draining = False
+        self._fleet_degraded = False  # any peer host out of HEALTHY
         self.stats = ServeStats()
         self.requests: list[Request] = []
 
@@ -222,12 +223,42 @@ class FrontDoor:
                 self.stats.count("accepted", n)
         return req
 
+    # ----------------------------------------------------- fleet health --
+    def request_drain(self, reason: str = "requested") -> None:
+        """Coordinated-drain entry point: stop admitting (the rest of the
+        traffic is shed with explicit accounting), finish every accepted
+        request.  Called by the serve loop when a *peer* host drains
+        (`engine.multihost` keep-alive), by operators, and internally on
+        watchdog EVICT / preemption."""
+        self.stats.mark_drain(reason)
+        self._draining = True
+        self._guard.request()
+
+    def observe_fleet(self, states) -> None:
+        """Fold one keep-alive round's per-host control words (the
+        ``on_health`` callback payload of `multihost.map_stream`) into
+        this door's scheduling: any peer out of HEALTHY shrinks the
+        coalescing target (`multihost.fleet_batch_target` — one slow host
+        slows every collective dispatch, so *every* door should stop
+        letting requests wait for full batches), and a draining /
+        errored peer triggers the coordinated drain."""
+        for s in states:
+            self.stats.observe_host(
+                s["host"], have=s.get("have", True),
+                state=s.get("state", HEALTHY),
+                draining=s.get("draining", False),
+                error=s.get("error", False))
+        self._fleet_degraded = any(
+            s.get("state", HEALTHY) != HEALTHY for s in states)
+        if any(s.get("draining") or s.get("error") for s in states):
+            self.request_drain("fleet")
+
     # ------------------------------------------------------- scheduler ---
     def _target(self, lane: str) -> int:
         """Coalescing fill target: full batches while HEALTHY, degraded
-        otherwise (a straggling step should shorten waits, not grow
-        them)."""
-        if self._watchdogs[lane].state != HEALTHY:
+        otherwise (a straggling step — local or anywhere in the fleet —
+        should shorten waits, not grow them)."""
+        if self._watchdogs[lane].state != HEALTHY or self._fleet_degraded:
             return max(1, int(self.stream_batch * self.config.degrade_factor))
         return self.stream_batch
 
@@ -312,6 +343,7 @@ class FrontDoor:
         if self._watchdogs[lane].observe(t - t_dispatch) == EVICT:
             # persistent straggler: degrading didn't help — stop taking
             # traffic and drain what was accepted
+            self.stats.mark_drain("watchdog-evict")
             self._guard.request()
         for req, lo, hi in spans:
             req.result = jax.tree.map(lambda a: a[lo:hi], res)
@@ -361,6 +393,7 @@ class FrontDoor:
         it = iter(arrivals)
         for item in it:
             if self._guard.should_checkpoint():
+                self.stats.mark_drain("preemption")
                 self._draining = True
             lane, reads = item[0], item[1]
             deadline_s = item[2] if len(item) > 2 else None

@@ -380,6 +380,20 @@ class Mapper:
                  LONG_STAT_KEYS, 1),
     }
 
+    def _fused_cached(self, key, build):
+        """Fetch-or-build a fused stream step in the session's bounded
+        LRU (`_FUSED_CACHE_MAX`).  Shared by `_fused_step` and the
+        multi-host twin (`engine.multihost._fused_masked_step`), so both
+        step families compete for the same bound."""
+        if key in self._fused_cache:
+            self._fused_cache.move_to_end(key)
+            return self._fused_cache[key]
+        step = build()
+        self._fused_cache[key] = step
+        while len(self._fused_cache) > _FUSED_CACHE_MAX:
+            self._fused_cache.popitem(last=False)
+        return step
+
     def _fused_step(self, reduce_fn, lane: str = "pairs"):
         """One jitted dispatch per stream batch: step + totals + reduce.
 
@@ -394,40 +408,36 @@ class Mapper:
         closure per call) reuses the jitted step; distinct callables
         evict the least recently used entry past `_FUSED_CACHE_MAX`.
         """
-        key = (lane, reduce_fn)
-        if key in self._fused_cache:
-            self._fused_cache.move_to_end(key)
-            return self._fused_cache[key]
         raw_attr, counts_fn, keys, n_arrays = self._LANES[lane]
         raw = getattr(self, raw_attr)
         mesh = self.exec_cfg.mesh
 
-        def fused(state, carry, *rest):
-            *reads, n, aux = rest
-            res = raw(*state, *reads, n)
-            totals, red = carry
-            counts = counts_fn(res)
-            totals = {k: totals[k] + counts[k] for k in keys}
-            if reduce_fn is not None:
-                red = reduce_fn(red, res, aux)
-            return res, (totals, red)
+        def build():
+            def fused(state, carry, *rest):
+                *reads, n, aux = rest
+                res = raw(*state, *reads, n)
+                totals, red = carry
+                counts = counts_fn(res)
+                totals = {k: totals[k] + counts[k] for k in keys}
+                if reduce_fn is not None:
+                    red = reduce_fn(red, res, aux)
+                return res, (totals, red)
 
-        donate = (1,) + (tuple(range(2, 2 + n_arrays))
-                         if self.exec_cfg.donate_reads else ())
-        kwargs = {"donate_argnums": donate}
-        if mesh is not None:
-            batch_spec = NamedSharding(mesh, P(self.exec_cfg.batch_axes))
-            repl = NamedSharding(mesh, P())
-            kwargs.update(
-                in_shardings=(tuple(self._state_shardings), repl)
-                + (batch_spec,) * n_arrays + (repl, batch_spec),
-                out_shardings=(batch_spec, repl),
-            )
-        step = jax.jit(fused, **kwargs)
-        self._fused_cache[key] = step
-        while len(self._fused_cache) > _FUSED_CACHE_MAX:
-            self._fused_cache.popitem(last=False)
-        return step
+            donate = (1,) + (tuple(range(2, 2 + n_arrays))
+                             if self.exec_cfg.donate_reads else ())
+            kwargs = {"donate_argnums": donate}
+            if mesh is not None:
+                batch_spec = NamedSharding(mesh,
+                                           P(self.exec_cfg.batch_axes))
+                repl = NamedSharding(mesh, P())
+                kwargs.update(
+                    in_shardings=(tuple(self._state_shardings), repl)
+                    + (batch_spec,) * n_arrays + (repl, batch_spec),
+                    out_shardings=(batch_spec, repl),
+                )
+            return jax.jit(fused, **kwargs)
+
+        return self._fused_cached((lane, reduce_fn), build)
 
     def _stream(self, lane, batches, on_result, reduce_fn, reduce_init,
                 warmup_batch) -> StreamResult:

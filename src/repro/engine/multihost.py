@@ -1,4 +1,5 @@
-"""Multi-host `map_stream`: per-host generators, one global fused dispatch.
+"""Multi-host `map_stream`: per-host generators, one global fused dispatch,
+and the fleet's lockstep keep-alive fault-tolerance protocol.
 
 A serve fleet runs one jax program per host (`jax.distributed.initialize`
 with a shared coordinator), each host pulling reads from its *own* source
@@ -17,22 +18,44 @@ Contract differences vs the single-host loop (`Mapper.map_stream`):
     *inside* the global batch (per-shard), not at its end.  The fused
     step therefore takes a (B,) per-row validity mask instead of the
     scalar leading-rows count (`plan._mask_tail` handles both ranks).
-  * **lockstep** — every host must yield the same number of batches:
-    each dispatch is a collective program, and a host that stops early
-    deadlocks the rest.  Pad trailing all-invalid batches on hosts that
-    run out of reads.
+  * **lockstep keep-alive** — every dispatch is a collective program, so
+    a host that exits the loop early deadlocks the rest.  No host ever
+    does: each round's fused step additionally all-gathers a tiny
+    per-host **control word** ``[want_continue, watchdog_state,
+    draining, error]``, and a host whose generator ran dry, whose
+    `PreemptionGuard` fired or whose iteration raised keeps
+    participating with all-invalid padded batches (masked, so stats
+    stay exact) until the shared control history says every host is
+    idle — at which point all hosts stop at the *same* round, by the
+    same pure rule on the same replicated values.
+  * **coordinated drain** — a host publishing ``draining`` (SIGTERM via
+    the guard, watchdog EVICT, or a converted iteration error) flips
+    every peer to draining as soon as they observe it: the fleet stops
+    pulling new batches and winds down together.  Batches already
+    pulled are still dispatched — no accepted batch is ever lost.
   * **stats** — the device-side stage totals are computed on the global
     batch and replicated, so every host's `StreamResult` is identical;
-    gate host-side reporting with `process_index` / `log0`.
+    the per-host health ledger (`ServeStats.fleet`, `StreamResult.
+    health`) records who contributed what.  Gate host-side reporting
+    with `process_index` / `log0`.
+
+The control word costs one tiny replicated array per dispatch (it rides
+inside the fused program — no extra collective launch) and one host-side
+fetch per round at a one-round lag: the host reads round ``k-1``'s
+consensus after assembling round ``k``'s batch, so generation still
+overlaps the in-flight step.  The price of consensus is one trailing
+all-invalid round per stream.
 
 When ``jax.process_count() == 1`` the call degrades to the single-host
-``Mapper._stream`` loop — same results, same `StreamResult` — so code
-written against this entry point runs unchanged in a single-controller
-dev session (pinned by tests/test_index_store.py; the two-process CPU
-bit-identity check lives in tests/_multihost_worker.py).
+``Mapper._stream`` loop — the keep-alive machinery is fully bypassed,
+results bit-identical (pinned by tests/test_index_store.py); a ``guard``
+/ ``watchdog`` still get honored host-side (drain between batches) so
+``serve.py --chaos`` behaves on one host too.  The two-process CPU
+bit-identity and chaos suites live in tests/_multihost_worker.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 
@@ -42,12 +65,32 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.engine.mapper import _DONATE_MSG, Mapper
-from repro.engine.stats import fetch_stage_totals, init_stage_totals
+from repro.engine.stats import (
+    ServeStats,
+    fetch_stage_totals,
+    init_stage_totals,
+)
 from repro.engine.stream import StreamResult, pad_tail, split_batch
+from repro.runtime.watchdog import (
+    DEGRADED,
+    EVICT,
+    HEALTHY,
+    Watchdog,
+    WatchdogConfig,
+)
 
 #: the denominator stat key per lane — already a device-side sum of the
 #: global ``n_valid`` mask, so it doubles as the fleet-wide item count
 _DENOM = {"pairs": "n_pairs", "long": "n_reads"}
+
+#: control-word fields (per host, int32): does this host contribute real
+#: data this round / its watchdog state / is it draining / did its
+#: iteration raise (the error is re-raised host-side after the stop)
+CTRL_FIELDS = ("want_continue", "state", "draining", "error")
+_CTRL_W = len(CTRL_FIELDS)
+
+_STATE_CODE = {HEALTHY: 0, DEGRADED: 1, EVICT: 2}
+_CODE_STATE = {v: k for k, v in _STATE_CODE.items()}
 
 
 def process_count() -> int:
@@ -67,6 +110,40 @@ def log0(*args, **kwargs) -> None:
     """`print`, on the coordinator only."""
     if is_coordinator():
         print(*args, **kwargs)
+
+
+def fleet_batch_target(states, base: int,
+                       degrade_factor: float = 0.5) -> int:
+    """The fleet's coalescing/batch target given per-host health.
+
+    ``states`` is an iterable of watchdog state strings (one per host,
+    e.g. from an ``on_health`` callback or ``StreamResult.health``); any
+    host out of HEALTHY shrinks the target by ``degrade_factor`` — a
+    degraded *host* slows every collective dispatch, so the whole fleet
+    coalesces smaller batches and requests stop waiting behind it
+    (`FrontDoor.observe_fleet` applies this to its queues).
+    """
+    if any(s != HEALTHY for s in states):
+        return max(1, int(base * degrade_factor))
+    return base
+
+
+def check_local_rows(host: int, batch_idx: int, local_n: int,
+                     local_batch: int) -> None:
+    """Reject a host batch larger than the fixed per-host split.
+
+    `pad_tail` only pads *up*; a host yielding more than ``local_batch``
+    rows would otherwise surface as a generic shape error deep in the
+    assembly (or silently skew the fleet split when the first batch
+    fixes it).  Raise with the host, the batch index and both sizes so
+    the offending generator is identifiable from any host's log.
+    """
+    if local_n > local_batch:
+        raise ValueError(
+            f"host {host}: batch {batch_idx} has {local_n} rows but the "
+            f"fleet's per-host batch is {local_batch} "
+            f"(stream_batch / process_count); shrink the batch or raise "
+            f"stream_batch")
 
 
 def _global_batch_arrays(mesh, batch_axes, local_arrays):
@@ -98,61 +175,218 @@ def _global_aux(mesh, batch_axes, aux, local_batch):
     return jax.tree.map(put, aux)
 
 
+def _row_process(mesh, batch_axes) -> np.ndarray:
+    """Process index of each control-word row, in global row order.
+
+    The control array shards one row per device over ``batch_axes``;
+    rows follow the mesh's device order along those axes (exact for the
+    1-D replicated-index serve mesh; rows of one host are identical by
+    construction, so per-host extraction is order-insensitive anyway).
+    """
+    return np.array([d.process_index for d in mesh.devices.flat],
+                    dtype=np.int64)
+
+
 def _fused_masked_step(mapper: Mapper, reduce_fn, lane: str):
     """The multi-host twin of `Mapper._fused_step`: same fused body, but
-    the tail argument is a (B,) validity mask and the jit carries no
-    explicit in_shardings — the committed global inputs fix the
-    placement, and a batch-length mask must follow the batch sharding,
-    not the single-host step's replicated-``n`` slot.  Cached in the
-    session's bounded fused-step LRU under a multihost-tagged key.
+    the tail argument is a (B,) validity mask, the per-host keep-alive
+    control words ride along (replicated on the way out — the one
+    all-gather the lockstep protocol needs, fused into the dispatch) and
+    the jit carries no explicit in_shardings — the committed global
+    inputs fix the placement, and a batch-length mask must follow the
+    batch sharding, not the single-host step's replicated-``n`` slot.
+    Cached in the session's bounded fused-step LRU under a
+    multihost-tagged key.
     """
-    key = ("multihost", lane, reduce_fn)
-    if key in mapper._fused_cache:
-        mapper._fused_cache.move_to_end(key)
-        return mapper._fused_cache[key]
     raw_attr, counts_fn, keys, n_arrays = mapper._LANES[lane]
     raw = getattr(mapper, raw_attr)
+    repl = NamedSharding(mapper.exec_cfg.mesh, P())
 
-    def fused(state, carry, *rest):
-        *reads, mask, aux = rest
-        res = raw(*state, *reads, mask)
-        totals, red = carry
-        counts = counts_fn(res)
-        totals = {k: totals[k] + counts[k] for k in keys}
-        if reduce_fn is not None:
-            red = reduce_fn(red, res, aux)
-        return res, (totals, red)
+    def build():
+        def fused(state, carry, *rest):
+            *reads, mask, ctrl, aux = rest
+            res = raw(*state, *reads, mask)
+            # replicate the per-host control words so every host can
+            # read the fleet consensus from its own addressable shard
+            ctrl_g = jax.lax.with_sharding_constraint(ctrl, repl)
+            totals, red = carry
+            counts = counts_fn(res)
+            totals = {k: totals[k] + counts[k] for k in keys}
+            if reduce_fn is not None:
+                red = reduce_fn(red, res, aux)
+            return res, ctrl_g, (totals, red)
 
-    donate = (1,) + (tuple(range(2, 2 + n_arrays))
-                     if mapper.exec_cfg.donate_reads else ())
-    step = jax.jit(fused, donate_argnums=donate)
-    mapper._fused_cache[key] = step
-    from repro.engine.mapper import _FUSED_CACHE_MAX
-    while len(mapper._fused_cache) > _FUSED_CACHE_MAX:
-        mapper._fused_cache.popitem(last=False)
-    return step
+        donate = (1,) + (tuple(range(2, 2 + n_arrays))
+                         if mapper.exec_cfg.donate_reads else ())
+        return jax.jit(fused, donate_argnums=donate)
+
+    return mapper._fused_cached(("multihost", lane, reduce_fn), build)
+
+
+def _host_batches(batches, guard, dog: Watchdog | None, stats: ServeStats):
+    """Single-process chaos shim: the keep-alive protocol is bypassed
+    (one host cannot deadlock itself), but a `PreemptionGuard` still
+    turns SIGTERM into drain-between-batches and a `Watchdog` still
+    tracks generator stalls — so ``serve.py --chaos`` is meaningful on
+    one host and bit-identical to `Mapper._stream` on the accepted
+    prefix."""
+    it = iter(batches)
+    while True:
+        if guard is not None and guard.should_checkpoint():
+            stats.mark_drain("preemption")
+            return
+        t0 = time.time()
+        try:
+            item = next(it)
+        except StopIteration:
+            return
+        if dog is not None and dog.observe(time.time() - t0) == EVICT:
+            stats.mark_drain("watchdog-evict")
+            if guard is not None:
+                guard.request()
+            yield item        # EVICT drains, but the pulled batch lands
+            return
+        yield item
+
+
+@dataclasses.dataclass
+class _HostSource:
+    """This host's side of the keep-alive protocol: pulls batches,
+    absorbing exhaustion, preemption, watchdog EVICT and iteration
+    errors into the permanent (exhausted / draining / error) flags the
+    control word publishes.  Pure host-side state — unit-testable
+    without a fleet."""
+
+    it: object
+    guard: object = None
+    dog: Watchdog | None = None
+    stats: ServeStats = dataclasses.field(default_factory=ServeStats)
+    exhausted: bool = False
+    draining: bool = False
+    error: BaseException | None = None
+
+    def pull(self):
+        """Next item, or None once this host only keep-alives.
+
+        The pull is timed into the host's watchdog: with one collective
+        program the *dispatch* wall-time is common-mode across the
+        fleet, so the host-attributable straggler signal is the time it
+        spends producing its own batch at the dispatch boundary.
+        """
+        item = None
+        if not (self.exhausted or self.draining):
+            t0 = time.time()
+            try:
+                item = next(self.it)
+            except StopIteration:
+                self.exhausted = True
+            except Exception as e:  # noqa: BLE001 — converted, re-raised
+                self.fail(e)
+            else:
+                if self.dog is not None and \
+                        self.dog.observe(time.time() - t0) == EVICT:
+                    self.draining = True
+                    self.stats.mark_drain("watchdog-evict")
+        if self.guard is not None and self.guard.should_checkpoint() \
+                and not self.draining:
+            self.draining = True
+            self.stats.mark_drain("preemption")
+        return item
+
+    def fail(self, e: BaseException) -> None:
+        """Convert a host-side error into a draining keep-alive exit."""
+        if self.error is None:
+            self.error = e
+        self.draining = True
+        self.stats.mark_drain("error")
+
+    def drain_for_fleet(self) -> None:
+        """A peer is draining/errored: stop pulling, wind down with it."""
+        if not self.draining:
+            self.draining = True
+            self.stats.mark_drain("fleet")
+
+    @property
+    def idle(self) -> bool:
+        return self.exhausted or self.draining
+
+    def ctrl_word(self, have: bool) -> np.ndarray:
+        state = self.dog.state if self.dog is not None else HEALTHY
+        return np.array([[int(have), _STATE_CODE[state],
+                          int(self.draining), int(self.error is not None)]],
+                        dtype=np.int32)
 
 
 def map_stream(mapper: Mapper, batches, *, lane: str = "pairs",
                on_result=None, reduce_fn=None, reduce_init=None,
-               warmup_batch=None) -> StreamResult:
+               warmup_batch=None, guard=None, watchdog=None,
+               serve_stats: ServeStats | None = None, on_health=None,
+               pad_batch=None) -> StreamResult:
     """Stream this host's batches through the fleet-wide fused step.
 
     ``batches`` yields this *host's* ``(*reads[, aux])`` items (the
     single-host `map_stream` item contract, at the per-host batch
     shape).  ``reduce_fn`` / ``reduce_init`` / ``warmup_batch`` /
     ``on_result`` behave as on `Mapper.map_stream`; ``on_result`` sees
-    the *global* result array (read its addressable shards host-side).
-    ``lane`` selects "pairs" or "long".  Returns the same `StreamResult`
-    on every host: ``n_pairs`` is the fleet-wide valid-item total
-    (fetched from the device-side denominator stat, which sums the
-    global validity mask).
+    the *global* result array (read its addressable shards host-side)
+    for every dispatch round, including all-invalid keep-alive rounds
+    (the mask says which).  ``lane`` selects "pairs" or "long".
+
+    Fault tolerance (the lockstep keep-alive protocol — see the module
+    docstring): ``guard`` is an optional `PreemptionGuard` whose firing
+    drains the whole fleet with no accepted batch lost; ``watchdog`` is
+    a `Watchdog` or `WatchdogConfig` fed this host's batch-production
+    wall-times (its state is published fleet-wide through the control
+    word; EVICT escalates to a coordinated drain); ``serve_stats``
+    receives the per-host health ledger (one is created if not given —
+    it also lands on ``StreamResult.health``); ``on_health(round,
+    states)`` is called once per observed round with the fleet's
+    per-host control words (e.g. to shrink a front door's coalescing
+    target via `fleet_batch_target`).  ``pad_batch`` is a template item
+    used to build keep-alive padding if this host runs dry before
+    yielding anything (otherwise the first item / warmup batch is the
+    template; a pairs-lane host with a pinned ``stream_batch`` can
+    derive one).
+
+    A mid-stream iteration error no longer abandons the collective
+    (deadlocking every peer): it converts into a draining keep-alive
+    exit and the original exception is re-raised *after* the fleet
+    stops, with the final `StreamResult` attached as
+    ``.stream_result``.
+
+    Returns the same `StreamResult` on every host: ``n_pairs`` is the
+    fleet-wide valid-item total (fetched from the device-side
+    denominator stat, which sums the global validity mask — keep-alive
+    padding counts toward nothing), ``n_batches`` the fleet's dispatch
+    rounds, and ``health`` the per-host ledger.
     """
+    stats = serve_stats if serve_stats is not None else ServeStats()
+    dog = (Watchdog(watchdog) if isinstance(watchdog, WatchdogConfig)
+           else watchdog)
     if jax.process_count() == 1:
         # Single-controller degradation: today's single-host loop,
-        # bit-identically (same fused step, scalar-n tail masking).
-        return mapper._stream(lane, batches, on_result, reduce_fn,
-                              reduce_init, warmup_batch)
+        # bit-identically (same fused step, scalar-n tail masking); the
+        # keep-alive machinery is fully bypassed.
+        if guard is None and dog is None and serve_stats is None:
+            return mapper._stream(lane, batches, on_result, reduce_fn,
+                                  reduce_init, warmup_batch)
+        src = _host_batches(batches, guard, dog, stats)
+        sr = mapper._stream(lane, src, on_result, reduce_fn,
+                            reduce_init, warmup_batch)
+        health = {
+            "host": 0, "n_hosts": 1, "lane": lane,
+            "rounds": sr.n_batches, "local_batches": sr.n_batches,
+            "keepalive_rounds": 0,
+            "drained": stats.drain_reason is not None,
+            "drain_reason": stats.drain_reason,
+            "watchdog": dog.state if dog is not None else HEALTHY,
+            "error": None, "ctrl_log": [],
+        }
+        stats.fleet[0] = {"batches": sr.n_batches, "keepalive": 0,
+                          "state": health["watchdog"],
+                          "draining": health["drained"], "error": False}
+        return dataclasses.replace(sr, health=health)
+
     mesh = mapper.exec_cfg.mesh
     if mesh is None:
         raise ValueError(
@@ -162,9 +396,12 @@ def map_stream(mapper: Mapper, batches, *, lane: str = "pairs",
         raise NotImplementedError(
             "multi-host map_stream serves the replicated-index plan; "
             "shard_index sessions are single-controller only")
+    if dog is None:
+        dog = Watchdog()
     _, _, keys, n_arrays = mapper._LANES[lane]
     axes = mapper.exec_cfg.batch_axes
     n_proc = jax.process_count()
+    pid = jax.process_index()
     local_batch = None
     if mapper.exec_cfg.stream_batch is not None:
         if mapper.exec_cfg.stream_batch % n_proc:
@@ -177,50 +414,202 @@ def map_stream(mapper: Mapper, batches, *, lane: str = "pairs",
     carry = jax.device_put(
         (init_stage_totals(keys), jax.tree.map(jnp.copy, reduce_init)),
         repl)
+    row_proc = _row_process(mesh, axes)
 
-    def assemble(item):
-        nonlocal local_batch
-        reads, aux = split_batch(item, n_arrays)
-        local_n = int(np.asarray(reads[0]).shape[0])
+    # --- keep-alive padding template: reads/aux shapes this host pads
+    # with once its generator is done.  Fixed by pad_batch, the warmup
+    # batch or the first real item — whichever comes first.
+    template = None          # (read_shapes/dtypes, aux zero-pytree)
+    aux_tdef = None
+
+    def set_template(reads, aux):
+        nonlocal template, aux_tdef
+        if template is None:
+            template = (
+                tuple((r.shape[1:], r.dtype) for r in reads),
+                jax.tree.map(
+                    lambda a: np.zeros_like(np.asarray(a)), aux))
+            aux_tdef = jax.tree.structure(aux)
+
+    def default_template():
+        # A host that never yielded anything still has to keep-alive.
+        if lane == "pairs" and local_batch is not None:
+            L = mapper.pipe_cfg.read_len
+            return (tuple(((L,), np.dtype(np.uint8))
+                          for _ in range(n_arrays)), ())
+        raise ValueError(
+            f"host {pid} ran dry before its first batch and no "
+            "pad_batch template was given; pass pad_batch= (an example "
+            "(*reads[, aux]) item) so keep-alive padding can match the "
+            "fleet's batch shapes")
+
+    if pad_batch is not None:
+        p_reads, p_aux = split_batch(pad_batch, n_arrays)
+        p_reads = tuple(np.asarray(r) for r in p_reads)
         if local_batch is None:
-            local_batch = local_n
+            local_batch = int(p_reads[0].shape[0])
+        set_template(p_reads, p_aux)
+
+    # One control row per local mesh device (rows of one host are
+    # identical — the fleet consensus is per host, not per device).
+    local_rows = int(sum(1 for d in mesh.devices.flat
+                         if d.process_index == pid))
+
+    def assemble(item, batch_idx):
+        """One host item (or None for keep-alive padding) -> the global
+        (reads, mask, aux) arrays of this round's collective."""
+        nonlocal local_batch, template
+        if item is not None:
+            reads, aux = split_batch(item, n_arrays)
+            reads = tuple(np.asarray(r) for r in reads)
+            local_n = int(reads[0].shape[0])
+            if local_batch is None:
+                local_batch = local_n
+            check_local_rows(pid, batch_idx, local_n, local_batch)
+            set_template(reads, aux)
+            if jax.tree.structure(aux) != aux_tdef:
+                raise ValueError(
+                    f"host {pid}: batch {batch_idx} aux pytree structure "
+                    f"changed mid-stream (torn record?): "
+                    f"{jax.tree.structure(aux)} != {aux_tdef}")
+        else:
+            if template is None:
+                template = default_template()
+            reads_spec, aux_zero = template
+            reads = tuple(np.zeros((local_batch,) + shape, dtype)
+                          for shape, dtype in reads_spec)
+            aux = aux_zero
+            local_n = 0
         g_reads = _global_batch_arrays(
-            mesh, axes, (pad_tail(np.asarray(r), local_batch)
-                         for r in reads))
+            mesh, axes, (pad_tail(r, local_batch) for r in reads))
         mask = np.arange(local_batch, dtype=np.int32) < local_n
         (g_mask,) = _global_batch_arrays(mesh, axes, (mask,))
         g_aux = _global_aux(mesh, axes, aux, local_batch)
         return g_reads, g_mask, g_aux
 
-    n_batches = 0
+    src = _HostSource(it=iter(batches), guard=guard, dog=dog, stats=stats)
+    ctrl_log = []
+
+    def fold_ctrl(round_idx, ctrl_out):
+        """Fetch one round's replicated control words (the lag-1 host
+        sync) and fold the fleet view; returns True when every host was
+        idle that round — the shared stop rule."""
+        ctrl_np = np.asarray(ctrl_out)          # (rows, 4), replicated
+        by_host = np.stack([ctrl_np[row_proc == h][0]
+                            for h in range(n_proc)])
+        ctrl_log.append(by_host.astype(int).tolist())
+        states = []
+        for h in range(n_proc):
+            have, code, draining, err = (int(x) for x in by_host[h])
+            state = _CODE_STATE.get(code, HEALTHY)
+            stats.observe_host(h, have=bool(have), state=state,
+                               draining=bool(draining), error=bool(err))
+            states.append({"host": h, "have": bool(have), "state": state,
+                           "draining": bool(draining),
+                           "error": bool(err)})
+        if any(s["draining"] or s["error"] for s in states):
+            src.drain_for_fleet()
+        if on_health is not None:
+            on_health(round_idx, states)
+        return not any(s["have"] for s in states)
+
+    n_rounds = 0
+    n_real = 0
     prev = res = None
+    pending = None          # (round_idx, ctrl_out) awaiting its lag-1 read
     t0 = None
     with warnings.catch_warnings():
         warnings.filterwarnings("ignore", message=_DONATE_MSG,
                                 category=UserWarning)
         if warmup_batch is not None:
-            g_reads, g_mask, g_aux = assemble(warmup_batch)
+            g_reads, g_mask, g_aux = assemble(warmup_batch, -1)
             scrap = jax.tree.map(jnp.copy, carry)
-            _, scrap = step(mapper._state, scrap, *g_reads, g_mask, g_aux)
+            ctrl0 = _global_batch_arrays(
+                mesh, axes,
+                (np.tile(src.ctrl_word(True), (local_rows, 1)),))[0]
+            _, _, scrap = step(mapper._state, scrap, *g_reads, g_mask,
+                               ctrl0, g_aux)
             jax.block_until_ready(scrap)
-        for idx, item in enumerate(batches):
-            g_reads, g_mask, g_aux = assemble(item)
+        while True:
+            # 1. prepare this round's local contribution first — the
+            #    generator pull + H2D assembly overlap the in-flight
+            #    collective, preserving the stream's pipelining.
+            item = src.pull()
+            g = None
+            if item is not None:
+                try:
+                    g = assemble(item, n_rounds)
+                except Exception as e:  # noqa: BLE001 — drain, re-raise
+                    src.fail(e)
+                    item = None
+            if g is None:
+                if src.error is not None or src.idle:
+                    try:
+                        g = assemble(None, n_rounds)
+                    except Exception as e:  # noqa: BLE001
+                        src.fail(e)
+                        break   # nothing to pad with: stop contributing
+            # 2. lag-1 consensus: read round k-1's control words (blocks
+            #    only on a dispatch that already had a full round of
+            #    overlap).  All hosts evaluate the same stop rule on the
+            #    same replicated values, so all stop at the same round.
+            if pending is not None:
+                r_idx, ctrl_out = pending
+                pending = None
+                if fold_ctrl(r_idx, ctrl_out):
+                    # every host idle at k-1 => all idle now: stop
+                    # without dispatching (we hold no item — an idle
+                    # fleet cannot have handed us one this round).
+                    break
+            if g is None:
+                break           # template-less dry host: cannot pad
+            # 3. dispatch round k: real batch or keep-alive padding.
+            g_reads, g_mask, g_aux = g
+            ctrl = _global_batch_arrays(
+                mesh, axes,
+                (np.tile(src.ctrl_word(item is not None),
+                         (local_rows, 1)),))[0]
             if t0 is None:
                 t0 = time.time()
-            res, carry = step(mapper._state, carry, *g_reads, g_mask,
-                              g_aux)
-            n_batches += 1
+            res, ctrl_out, carry = step(mapper._state, carry, *g_reads,
+                                        g_mask, ctrl, g_aux)
+            pending = (n_rounds, ctrl_out)
+            n_rounds += 1
+            n_real += int(item is not None)
             if prev is not None and on_result is not None:
                 on_result(*prev)
-            prev = (idx, res, g_mask)
+            prev = (n_rounds - 1, res, g_mask)
         if prev is not None and on_result is not None:
             on_result(*prev)
+        if pending is not None:     # only on the template-less exit
+            fold_ctrl(*pending)
         if res is not None:
             jax.block_until_ready(res)
     seconds = 0.0 if t0 is None else time.time() - t0
     totals, reduced = carry
     totals = fetch_stage_totals(totals)
-    return StreamResult(n_pairs=totals.get(_DENOM[lane], 0),
-                        n_batches=n_batches, seconds=seconds,
-                        totals=totals, reduced=reduced,
-                        reads_per_item=n_arrays)
+    health = {
+        "host": pid, "n_hosts": n_proc, "lane": lane,
+        "rounds": n_rounds, "local_batches": n_real,
+        "keepalive_rounds": n_rounds - n_real,
+        "drained": src.draining,
+        "drain_reason": stats.drain_reason,
+        "watchdog": dog.state,
+        "error": repr(src.error) if src.error is not None else None,
+        "ctrl_log": ctrl_log,
+        "per_host": {str(h): dict(rec)
+                     for h, rec in sorted(stats.fleet.items())},
+    }
+    sr = StreamResult(n_pairs=totals.get(_DENOM[lane], 0),
+                      n_batches=n_rounds, seconds=seconds,
+                      totals=totals, reduced=reduced,
+                      reads_per_item=n_arrays, health=health)
+    if src.error is not None:
+        # The fleet has stopped cleanly; now surface the host's own
+        # failure with the stream's final state attached.
+        try:
+            src.error.stream_result = sr
+        except Exception:  # noqa: BLE001 — exotic exception types
+            pass
+        raise src.error
+    return sr

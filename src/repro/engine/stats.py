@@ -106,6 +106,14 @@ class ServeStats:
     queue_wait_s: list = dataclasses.field(default_factory=list)
     service_s: list = dataclasses.field(default_factory=list)
     total_s: list = dataclasses.field(default_factory=list)
+    #: per-host fleet health (`engine.multihost` keep-alive): host ->
+    #: {"batches", "keepalive", "state", "draining", "error"} — batches
+    #: counts rounds with real data, keepalive the all-invalid padded
+    #: rounds a drained host contributed to keep the collective alive
+    fleet: dict = dataclasses.field(default_factory=dict)
+    #: why the stream/door drained, first cause wins ("preemption",
+    #: "watchdog-evict", "fleet", "requested"), or None
+    drain_reason: str | None = None
 
     def count(self, outcome: str, rows: int) -> None:
         """Bump one lifecycle counter (+ its row total)."""
@@ -120,6 +128,22 @@ class ServeStats:
         self.queue_wait_s.append(t_dispatch - t_enqueue)
         self.service_s.append(t_result - t_dispatch)
         self.total_s.append(t_result - t_enqueue)
+
+    def observe_host(self, host: int, *, have: bool, state: str,
+                     draining: bool, error: bool = False) -> None:
+        """Fold one keep-alive control word into the per-host ledger."""
+        rec = self.fleet.setdefault(
+            host, {"batches": 0, "keepalive": 0, "state": state,
+                   "draining": False, "error": False})
+        rec["batches" if have else "keepalive"] += 1
+        rec["state"] = state
+        rec["draining"] = rec["draining"] or draining
+        rec["error"] = rec["error"] or error
+
+    def mark_drain(self, reason: str) -> None:
+        """Record why the stream drained; the first cause sticks."""
+        if self.drain_reason is None:
+            self.drain_reason = reason
 
     def observe_batch(self, lane: str, rows: int,
                       degraded: bool = False) -> None:
@@ -160,4 +184,9 @@ class ServeStats:
         }
         if capacity is not None:
             out["batch_fill"] = self.fill(capacity)
+        if self.fleet:
+            out["fleet"] = {str(h): dict(rec)
+                            for h, rec in sorted(self.fleet.items())}
+        if self.drain_reason is not None:
+            out["drain_reason"] = self.drain_reason
         return out

@@ -54,6 +54,11 @@ class StreamResult:
     totals: dict
     reduced: object = None
     reads_per_item: int = 2
+    #: fleet fault-tolerance ledger (`engine.multihost` keep-alive /
+    #: chaos runs): per-host batch & keep-alive counts, watchdog states,
+    #: control-word log and drain reason.  None on plain single-host
+    #: streams — the keep-alive machinery is bypassed there.
+    health: dict | None = None
 
     @property
     def pairs_per_s(self) -> float:

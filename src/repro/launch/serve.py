@@ -126,7 +126,8 @@ def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
           table_bits: int = 20, sub_rate: float = 1e-3,
           pipe_cfg: PipelineConfig = PipelineConfig(),
           seed: int = 0, verbose: bool = True, loop: str = "stream",
-          index_path: str | None = None) -> dict:
+          index_path: str | None = None,
+          chaos: str | None = None) -> dict:
     rng = np.random.default_rng(seed)
     t0 = time.time()
     ref = random_reference(ref_len, rng)
@@ -147,11 +148,14 @@ def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
     sim_cfg = ReadSimConfig(read_len=pipe_cfg.read_len, sub_rate=sub_rate)
 
     if loop == "legacy":
+        if chaos:
+            raise ValueError("--chaos drives the fault-tolerant stream "
+                             "loop; the legacy loop has no drain path")
         out = _serve_legacy(ref, sm, stream, sim_cfg, batch, batches,
                             pipe_cfg, t_index)
     elif loop == "stream":
         out = _serve_stream(ref, sm, stream, sim_cfg, batch, batches,
-                            pipe_cfg, t_index, mapper=mapper)
+                            pipe_cfg, t_index, mapper=mapper, chaos=chaos)
     else:
         raise ValueError(f"unknown loop {loop!r}; expected stream|legacy")
     if verbose:
@@ -160,7 +164,8 @@ def serve(ref_len: int = 500_000, batch: int = 512, batches: int = 10,
 
 
 def _serve_stream(ref, sm, stream, sim_cfg, batch, batches, pipe_cfg,
-                  t_index, mapper: Mapper | None = None) -> dict:
+                  t_index, mapper: Mapper | None = None,
+                  chaos: str | None = None) -> dict:
     if mapper is None:
         mapper = Mapper.from_index(
             sm, ref, pipe_cfg, ExecutionConfig(stream_batch=batch))
@@ -172,14 +177,52 @@ def _serve_stream(ref, sm, stream, sim_cfg, batch, batches, pipe_cfg,
 
     # warmup/compile on batch 0 (the legacy loop warms the same way)
     sim0 = read_pairs_for_step(ref, stream, 0, sim_cfg)
-    sr = mapper.map_stream(
-        gen(),
+    warmup = (sim0.reads1, sim0.reads2,
+              (sim0.true_start1, sim0.true_start2))
+    reduce_kw = dict(
         reduce_fn=_make_accuracy_reduce(pipe_cfg.max_gap),
-        reduce_init={k: jnp.zeros((), jnp.int32) for k in ACC_KEYS},
-        warmup_batch=(sim0.reads1, sim0.reads2,
-                      (sim0.true_start1, sim0.true_start2)))
+        reduce_init={k: jnp.zeros((), jnp.int32) for k in ACC_KEYS})
+    health = None
+    if chaos is not None:
+        # Fault-tolerant path: the batch source is wrapped with the
+        # deterministic fault schedule and served through the fleet
+        # stream (`engine.multihost.map_stream` — on one host the
+        # keep-alive protocol is bypassed, but SIGTERM still drains
+        # between batches and the watchdog tracks generator stalls).
+        from repro.engine import multihost
+        from repro.runtime import ChaosSpec, PreemptionGuard, inject
+        from repro.runtime.watchdog import STRAGGLE_DEMO_WATCHDOG
+
+        spec = ChaosSpec.parse(chaos)
+        guard = PreemptionGuard()
+        try:
+            sr = multihost.map_stream(
+                mapper,
+                inject(gen(), spec, host=multihost.process_index()),
+                guard=guard,
+                watchdog=STRAGGLE_DEMO_WATCHDOG
+                if any(f.kind == "straggle" for f in spec.faults)
+                else None,
+                warmup_batch=warmup, **reduce_kw)
+        finally:
+            guard.uninstall()
+        health = sr.health
+    else:
+        sr = mapper.map_stream(gen(), warmup_batch=warmup, **reduce_kw)
     a = {k: int(v) for k, v in sr.reduced.items()}
     n = max(sr.n_pairs, 1)
+    if health is not None:
+        return {
+            "pairs": sr.n_pairs,
+            "pairs_per_s": sr.pairs_per_s,
+            "index_build_s": t_index,
+            "loop": "stream",
+            "chaos": chaos,
+            "health": health,
+            "mapped_frac": a["mapped1"] / n,
+            "correct_of_mapped": a["correct1"] / max(a["mapped1"], 1),
+            **sr.fractions,
+        }
     return {
         "pairs": sr.n_pairs,
         "pairs_per_s": sr.pairs_per_s,
@@ -554,6 +597,15 @@ def main():
                          "rebuilding (composes with --loop frontdoor and "
                          "--workload long; unreadable stores degrade to "
                          "a full build)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection on the stream "
+                         "loop (runtime.faultinject grammar, e.g. "
+                         "'dry@0:3' or 'sigterm@0:2,straggle@0:1:0.05'): "
+                         "the serve drains instead of crashing and the "
+                         "output carries the health ledger")
+    ap.add_argument("--health-out", default=None, metavar="PATH",
+                    help="write the --chaos health ledger JSON here "
+                         "(the CI fleet artifact)")
     args = ap.parse_args()
     # The shared flag must not clobber per-workload defaults: short pairs
     # default 1e-3, the long lane the PacBio-like 0.01.
@@ -574,6 +626,9 @@ def main():
         compare_loops(out_path=args.out, reps=args.reps, **kwargs)
         return
     if args.loop == "frontdoor":
+        if args.chaos:
+            raise SystemExit("--chaos composes with --loop stream; the "
+                             "front door has its own guard/watchdog path")
         out = serve_frontdoor(read_len=args.read_len,
                               long_frac=args.long_frac,
                               deadline_s=args.deadline_s,
@@ -581,10 +636,18 @@ def main():
                               index_path=args.index,
                               **kwargs)
     elif args.workload == "long":
+        if args.chaos:
+            raise SystemExit("--chaos currently drives the pairs stream "
+                             "loop only")
         out = serve_long(read_len=args.read_len, index_path=args.index,
                          **kwargs)
     else:
-        out = serve(loop=args.loop, index_path=args.index, **kwargs)
+        out = serve(loop=args.loop, index_path=args.index,
+                    chaos=args.chaos, **kwargs)
+    if args.health_out and out.get("health") is not None:
+        os.makedirs(os.path.dirname(args.health_out) or ".", exist_ok=True)
+        with open(args.health_out, "w") as f:
+            json.dump(out["health"], f, indent=2, sort_keys=True)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -1,10 +1,12 @@
 from repro.runtime.elastic import RemeshPlan, build_mesh, plan_remesh
+from repro.runtime.faultinject import ChaosSpec, Fault, inject
 from repro.runtime.preemption import PreemptionGuard
 from repro.runtime.watchdog import (
     DEGRADED, EVICT, HEALTHY, Watchdog, WatchdogConfig,
 )
 
 __all__ = [
-    "DEGRADED", "EVICT", "HEALTHY", "PreemptionGuard", "RemeshPlan",
-    "Watchdog", "WatchdogConfig", "build_mesh", "plan_remesh",
+    "ChaosSpec", "DEGRADED", "EVICT", "Fault", "HEALTHY",
+    "PreemptionGuard", "RemeshPlan", "Watchdog", "WatchdogConfig",
+    "build_mesh", "inject", "plan_remesh",
 ]

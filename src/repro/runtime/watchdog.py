@@ -34,6 +34,13 @@ class WatchdogConfig:
     recovery: int = 10           # healthy steps to fully reset
 
 
+#: zero-warmup, hair-trigger config for chaos runs (`serve.py --chaos`,
+#: the two-process chaos suite): the very first observation seeds the
+#: EMA — the ``warmup_steps=0`` path — and one slow batch is enough to
+#: go DEGRADED, while EVICT keeps the default extra patience.
+STRAGGLE_DEMO_WATCHDOG = WatchdogConfig(warmup_steps=0, patience=1)
+
+
 @dataclasses.dataclass
 class Watchdog:
     config: WatchdogConfig = dataclasses.field(default_factory=WatchdogConfig)
@@ -51,7 +58,11 @@ class Watchdog:
             # warmup: build the EMA but never trigger
             self._fold(step_time_s)
             return self.state
-        assert self.ema is not None
+        if self.ema is None:
+            # warmup_steps=0: no EMA folded yet.  Seed it from the first
+            # sample — a lone sample has no baseline to be slow against.
+            self._fold(step_time_s)
+            return self.state
         slow = step_time_s > cfg.slow_factor * self.ema
         if slow:
             self.slow_streak += 1

@@ -4,27 +4,47 @@ Launched twice (process_id 0 and 1) against a shared local coordinator,
 each process owning one CPU device via the gloo collectives backend —
 the smallest real multi-controller fleet.  Both processes build the
 identical world (same seeds), then stream *disjoint* per-host batch
-slices through `engine.multihost.map_stream`; the single-device session
-on the same global rows is the bit-identity reference.  Asserts:
+slices through `engine.multihost.map_stream` under one of the chaos
+scenarios below; the single-device session on the same global rows is
+the bit-identity reference for every *accepted* round.
 
-  1. jax.distributed came up: 2 processes, 2 global devices, 1 local;
-  2. every result field of the global fused dispatch is bit-identical,
-     per addressable shard, to the single-device reference session on
-     the same rows (data assembled via make_array_from_process_local_data);
-  3. a ragged tail on one host only is masked *per shard* — validity is
-     not a global prefix — and `n_valid` matches the expected mask;
-  4. the device-side stage totals equal the mask-adjusted single-device
-     counts, and `StreamResult.n_pairs` is the fleet-wide valid total.
+Scenarios (argv[4], from `runtime.faultinject`):
 
-Prints ``SKIP: <reason>`` and exits 0 when the environment cannot run
-multi-process CPU jax (no gloo / no distributed init) — the parent test
-skips instead of failing.  Exit 0 with 4 ``ok:`` lines = passed.
+  base      no faults: 2 real rounds + 1 trailing keep-alive consensus
+            round, ragged tail on host 1 (non-prefix validity).
+  dry       ``dry@1:1``: host 1's generator ends after 1 batch; it must
+            keep-alive with all-invalid padding while host 0 finishes
+            its 3 batches — no deadlock, stats exact.
+  sigterm   ``sigterm@0:1``: host 0 is preempted mid-stream; its
+            `PreemptionGuard` publishes ``draining`` through the control
+            word and the *whole fleet* winds down together — the batch
+            each host had already pulled still lands (no accepted batch
+            lost).
+  straggle  ``straggle@1:1:0.05``: host 1's batch source stalls; its
+            per-host watchdog (warmup_steps=0 — the zero-warmup
+            regression path) goes DEGRADED and the state is visible in
+            *both* hosts' health ledgers.
+  torn      ``torn@1:1``: host 1 yields an aux pytree whose structure
+            changed mid-stream; the error converts into a draining
+            keep-alive exit, the peer drains via the fleet signal, and
+            the original ValueError is re-raised on host 1 *after* the
+            fleet stopped, with the final StreamResult attached.
+
+Every scenario asserts: clean shutdown at the same round on both hosts,
+per-shard bit-identity of every accepted round vs the single-device
+reference, device-side totals == mask-adjusted reference totals, and the
+expected per-host health ledger.  Prints ``SKIP: <reason>`` and exits 0
+when the environment cannot run multi-process CPU jax.  Exit 0 with the
+``ok: done`` line = passed.
 """
+import json
+import os
 import sys
 
 
 def main():
     pid, nproc, port = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+    scenario = sys.argv[4] if len(sys.argv) > 4 else "base"
     import jax
     try:
         jax.config.update("jax_cpu_collectives_implementation", "gloo")
@@ -48,6 +68,8 @@ def main():
     )
     from repro.engine import ExecutionConfig, Mapper
     from repro.engine import multihost
+    from repro.runtime import ChaosSpec, PreemptionGuard, inject
+    from repro.runtime.watchdog import DEGRADED, WatchdogConfig
 
     assert jax.process_count() == nproc, jax.process_count()
     assert len(jax.devices()) == nproc, jax.devices()
@@ -63,13 +85,68 @@ def main():
     sm = build_seedmap(ref, SeedMapConfig(table_bits=15))
     sim = simulate_pairs(ref, 29, ReadSimConfig(sub_rate=2e-3), seed=1)
 
-    local_b = 8               # global stream batch = 16 over 2 hosts
-    # host slices: batch 0 full on both; batch 1 ragged (5 rows) on host 1
-    slices = {0: [(0, 8), (8, 16)], 1: [(16, 24), (24, 29)]}
+    local_b = 4               # global stream batch = 8 over 2 hosts
+
+    # Per scenario: host batch slices, chaos spec, guard / watchdog, and
+    # the deterministic protocol outcome — ``rounds`` lists each round
+    # carrying real data as {host: (lo, hi)} (a missing host keep-alives
+    # that round), ``n_rounds`` includes the all-padding consensus
+    # round(s), ``keepalive`` is each host's padded-round count, and
+    # ``drain`` the expected per-host drain reason.
+    scen = {
+        "base": dict(
+            slices={0: [(0, 4), (4, 8)], 1: [(8, 12), (12, 15)]},
+            chaos=None, guard=False, watchdog=None,
+            rounds=[{0: (0, 4), 1: (8, 12)}, {0: (4, 8), 1: (12, 15)}],
+            n_rounds=3, n_pairs=15,
+            drain={0: None, 1: None}, keepalive={0: 1, 1: 1},
+            error_host=None),
+        "dry": dict(
+            slices={0: [(0, 4), (4, 8), (8, 12)],
+                    1: [(12, 16), (16, 20)]},
+            chaos="dry@1:1", guard=False, watchdog=None,
+            rounds=[{0: (0, 4), 1: (12, 16)}, {0: (4, 8)}, {0: (8, 12)}],
+            n_rounds=4, n_pairs=16,
+            drain={0: None, 1: None}, keepalive={0: 1, 1: 3},
+            error_host=None),
+        "sigterm": dict(
+            slices={0: [(0, 4), (4, 8), (8, 12), (12, 16)],
+                    1: [(16, 20), (20, 24), (24, 28), (28, 29)]},
+            chaos="sigterm@0:1", guard=True, watchdog=None,
+            # host 0 is preempted while pulling batch 1 — the pulled
+            # batch still dispatches; host 1 pulls batch 2 before it
+            # observes the drain (lag-1 consensus), then winds down.
+            rounds=[{0: (0, 4), 1: (16, 20)}, {0: (4, 8), 1: (20, 24)},
+                    {1: (24, 28)}],
+            n_rounds=4, n_pairs=20,
+            drain={0: "preemption", 1: "fleet"}, keepalive={0: 2, 1: 1},
+            error_host=None),
+        "straggle": dict(
+            slices={0: [(0, 4), (4, 8)], 1: [(8, 12), (12, 15)]},
+            chaos="straggle@1:1:0.05", guard=False,
+            watchdog=WatchdogConfig(warmup_steps=0, patience=1),
+            rounds=[{0: (0, 4), 1: (8, 12)}, {0: (4, 8), 1: (12, 15)}],
+            n_rounds=3, n_pairs=15,
+            drain={0: None, 1: None}, keepalive={0: 1, 1: 1},
+            error_host=None),
+        "torn": dict(
+            slices={0: [(0, 4), (4, 8), (8, 12)],
+                    1: [(12, 16), (16, 20), (20, 24)]},
+            chaos="torn@1:1", guard=False, watchdog=None,
+            rounds=[{0: (0, 4), 1: (12, 16)}, {0: (4, 8)}, {0: (8, 12)}],
+            n_rounds=4, n_pairs=16,
+            drain={0: "fleet", 1: "error"}, keepalive={0: 1, 1: 3},
+            error_host=1),
+    }[scenario]
 
     def batches():
-        for lo, hi in slices[pid]:
+        for lo, hi in scen["slices"][pid]:
             yield sim.reads1[lo:hi], sim.reads2[lo:hi]
+
+    src = batches()
+    if scen["chaos"] is not None:
+        src = inject(src, ChaosSpec.parse(scen["chaos"]), host=pid)
+    guard = PreemptionGuard() if scen["guard"] else None
 
     mesh = Mesh(np.array(jax.devices()), ("data",))
     mapper = Mapper.from_index(
@@ -77,28 +154,44 @@ def main():
         ExecutionConfig(mesh=mesh, stream_batch=2 * local_b))
 
     collected = {}
-    sr = multihost.map_stream(mapper, batches(),
-                              on_result=lambda i, res, mask:
-                              collected.__setitem__(i, (res, mask)))
+    err = None
+    try:
+        sr = multihost.map_stream(
+            mapper, src, guard=guard, watchdog=scen["watchdog"],
+            on_result=lambda i, res, mask:
+            collected.__setitem__(i, (res, mask)))
+    except ValueError as e:
+        assert "aux pytree structure" in str(e), e
+        sr = e.stream_result
+        err = e
+    assert (err is not None) == (scen["error_host"] == pid), \
+        (scenario, pid, err)
+    print(f"ok: stream stopped cleanly without deadlock "
+          f"({sr.n_batches} rounds)")
 
-    # Single-device reference session on the exact global row content
-    # (host-1 tail zero-padded like the stream pads it).
+    # Single-device reference session on the exact global row content:
+    # each accepted round's global batch is host 0's half ++ host 1's
+    # half, a keep-alive half being all-zero reads masked all-invalid.
     m_ref = Mapper.from_index(sm, ref, cfg)
-    pad = np.zeros((3, sim.reads1.shape[1]), sim.reads1.dtype)
-    global_rows = [
-        (np.concatenate([sim.reads1[0:8], sim.reads1[16:24]]),
-         np.concatenate([sim.reads2[0:8], sim.reads2[16:24]]),
-         np.ones(16, bool)),
-        (np.concatenate([sim.reads1[8:16], sim.reads1[24:29], pad]),
-         np.concatenate([sim.reads2[8:16], sim.reads2[24:29],
-                         np.zeros_like(pad)]),
-         np.arange(16) < 13),
-    ]
+    L = sim.reads1.shape[1]
     want_totals = None
-    for idx, (r1, r2, mask) in enumerate(global_rows):
-        # batch 1's mask is NOT a prefix once shard-ordered: host 0's 8
-        # rows are valid, host 1 contributes 5 valid + 3 padding.
-        res, gmask = collected[idx]
+    for idx, round_spec in enumerate(scen["rounds"]):
+        halves1, halves2, mparts = [], [], []
+        for h in (0, 1):
+            if h in round_spec:
+                lo, hi = round_spec[h]
+                n = hi - lo
+                pad = np.zeros((local_b - n, L), sim.reads1.dtype)
+                halves1.append(np.concatenate([sim.reads1[lo:hi], pad]))
+                halves2.append(np.concatenate([sim.reads2[lo:hi], pad]))
+                mparts.append(np.arange(local_b) < n)
+            else:
+                halves1.append(np.zeros((local_b, L), sim.reads1.dtype))
+                halves2.append(np.zeros((local_b, L), sim.reads2.dtype))
+                mparts.append(np.zeros(local_b, bool))
+        r1, r2 = np.concatenate(halves1), np.concatenate(halves2)
+        mask = np.concatenate(mparts)
+        res, _gmask = collected[idx]
         ref_res = m_ref.map(r1, r2)
         for f in res._fields:
             arr = getattr(res, f)
@@ -107,26 +200,62 @@ def main():
             got = np.asarray(shard.data)
             if f == "n_valid":
                 np.testing.assert_array_equal(
-                    got, mask[lo:lo + got.shape[0]], err_msg=f"batch{idx}")
+                    got, mask[lo:lo + got.shape[0]],
+                    err_msg=f"{scenario} round{idx}")
             else:
                 np.testing.assert_array_equal(
-                    got, np.asarray(getattr(ref_res, f))[lo:lo + got.shape[0]],
-                    err_msg=f"batch{idx}.{f}")
-        masked = ref_res._replace(n_valid=np.asarray(mask))
+                    got,
+                    np.asarray(getattr(ref_res, f))[lo:lo + got.shape[0]],
+                    err_msg=f"{scenario} round{idx}.{f}")
+        masked = ref_res._replace(n_valid=mask)
         counts = {k: int(v) for k, v in stage_stat_counts(masked).items()}
         want_totals = (counts if want_totals is None else
                        {k: want_totals[k] + counts[k] for k in counts})
-    print("ok: global fused dispatch bit-identical per shard vs "
-          "single-device reference")
-    print("ok: per-shard ragged tail mask (non-prefix validity) correct")
+    print("ok: every accepted round bit-identical per shard vs "
+          "single-device reference (keep-alive halves masked)")
 
     assert sr.totals == want_totals, (sr.totals, want_totals)
-    assert sr.n_pairs == 29, sr.n_pairs
-    assert sr.n_batches == 2, sr.n_batches
+    assert sr.n_pairs == scen["n_pairs"], sr.n_pairs
+    assert sr.n_batches == scen["n_rounds"], sr.n_batches
+    print("ok: device-side totals == mask-adjusted reference; no "
+          "accepted batch lost, keep-alive padding counts toward nothing")
+
+    h = sr.health
+    assert h["rounds"] == scen["n_rounds"], h
+    assert h["keepalive_rounds"] == scen["keepalive"][pid], h
+    assert h["drain_reason"] == scen["drain"][pid], h
+    assert len(h["ctrl_log"]) == scen["n_rounds"], h["ctrl_log"]
+    for hh in (0, 1):
+        rec = h["per_host"][str(hh)]
+        assert rec["keepalive"] == scen["keepalive"][hh], (hh, rec)
+        assert rec["batches"] == scen["n_rounds"] - scen["keepalive"][hh], \
+            (hh, rec)
+    if scenario == "straggle":
+        # the straggling host's DEGRADED state crossed the fleet: both
+        # ledgers carry it (and host 1's own watchdog agrees)
+        assert h["per_host"]["1"]["state"] == DEGRADED, h["per_host"]
+        if pid == 1:
+            assert h["watchdog"] == DEGRADED, h
+    if scenario == "sigterm":
+        assert h["per_host"]["0"]["draining"], h["per_host"]
+    if scenario == "torn":
+        assert h["per_host"]["1"]["error"], h["per_host"]
+        if pid == 1:
+            assert h["error"] is not None, h
+    json.dumps(h)             # the ledger must stay artifact-ready
+    out_dir = os.environ.get("FLEET_LEDGER_DIR")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir,
+                               f"health_{scenario}_h{pid}.json"),
+                  "w") as f:
+            json.dump(h, f, indent=2, sort_keys=True)
+    print("ok: per-host health ledger matches the scenario")
+
     if multihost.is_coordinator():
-        multihost.log0(f"coordinator report: {sr.totals}")
-    print("ok: device-side totals == mask-adjusted reference; "
-          "n_pairs is the fleet total")
+        multihost.log0(f"coordinator report [{scenario}]: {sr.totals} "
+                       f"fleet={h['per_host']}")
+    print(f"ok: done {scenario}")
 
 
 if __name__ == "__main__":

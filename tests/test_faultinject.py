@@ -1,0 +1,293 @@
+"""Unit tests for the fleet fault-tolerance pieces that need no fleet:
+the chaos grammar and injector (`runtime.faultinject`), the keep-alive
+host-side state machine and helpers (`engine.multihost`), the `ServeStats`
+health ledger, and the `FrontDoor` fleet-health hooks.  The two-process
+protocol itself is pinned by tests/test_multihost.py.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.engine import ExecutionConfig, Mapper, ServeStats
+from repro.engine import multihost
+from repro.engine.frontdoor import FrontDoor, FrontDoorConfig
+from repro.runtime import ChaosSpec, Fault, PreemptionGuard, inject
+from repro.runtime.faultinject import TORN_KEY, torn_item
+from repro.runtime.watchdog import (
+    DEGRADED, EVICT, HEALTHY, Watchdog, WatchdogConfig,
+)
+from repro.core import (
+    PipelineConfig, ReadSimConfig, SeedMapConfig, build_seedmap,
+    random_reference, simulate_pairs,
+)
+
+
+# ------------------------------------------------------- chaos grammar ---
+def test_chaos_spec_parse_roundtrip():
+    s = "dry@1:2,sigterm@0:3,straggle@1:1:0.05,torn@0:2"
+    spec = ChaosSpec.parse(s)
+    assert str(spec) == s
+    assert [f.kind for f in spec.faults] == ["dry", "sigterm", "straggle",
+                                             "torn"]
+    assert spec.for_host(1) == (spec.faults[0], spec.faults[2])
+    assert spec.for_host(7) == ()
+
+
+@pytest.mark.parametrize("bad", ["dry", "dry@x:1", "dry@0", "boom@0:1",
+                                 "straggle@0:1"])
+def test_chaos_spec_rejects_bad_terms(bad):
+    with pytest.raises(ValueError,
+                       match="chaos term|straggle fault|fault kind"):
+        ChaosSpec.parse(bad)
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("boom", 0, 0)
+    with pytest.raises(ValueError, match=">= 0"):
+        Fault("dry", -1, 0)
+    with pytest.raises(ValueError, match="delay_s > 0"):
+        Fault("straggle", 0, 0)
+
+
+# ----------------------------------------------------------- injector ---
+def _items(n):
+    return [(np.full((2, 4), i, np.uint8),
+             np.full((2, 4), 10 + i, np.uint8)) for i in range(n)]
+
+
+def test_inject_dry_ends_generator():
+    got = list(inject(iter(_items(5)), ChaosSpec.parse("dry@0:2"), host=0))
+    assert len(got) == 2
+    # faults pinned to another host never fire
+    got = list(inject(iter(_items(5)), ChaosSpec.parse("dry@1:2"), host=0))
+    assert len(got) == 5
+
+
+def test_inject_straggle_sleeps_from_at():
+    t0 = time.time()
+    got = list(inject(iter(_items(3)),
+                      ChaosSpec.parse("straggle@0:1:0.05"), host=0))
+    assert len(got) == 3
+    assert time.time() - t0 >= 0.1    # batches 1 and 2 each slept
+
+
+def test_inject_torn_swaps_item():
+    got = list(inject(iter(_items(3)), ChaosSpec.parse("torn@0:1"), host=0))
+    assert len(got[0]) == 2
+    assert len(got[1]) == 3 and got[1][2] == {TORN_KEY: 0}
+    assert len(got[2]) == 2
+    assert torn_item(_items(1)[0])[2] == {TORN_KEY: 0}
+
+
+def test_inject_sigterm_sets_guard_not_stop():
+    guard = PreemptionGuard()
+    try:
+        got = list(inject(iter(_items(3)),
+                          ChaosSpec.parse("sigterm@0:1"), host=0))
+        # the wrapper keeps yielding — reacting is the stream's job
+        assert len(got) == 3
+        assert guard.should_checkpoint()
+    finally:
+        guard.uninstall()
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+
+
+# ----------------------------------------------- keep-alive host pieces ---
+def test_check_local_rows_names_host_batch_and_sizes():
+    multihost.check_local_rows(1, 3, 8, 8)      # exact fit is fine
+    with pytest.raises(ValueError) as ei:
+        multihost.check_local_rows(1, 3, 9, 8)
+    msg = str(ei.value)
+    assert "host 1" in msg and "batch 3" in msg
+    assert "9 rows" in msg and "per-host batch is 8" in msg
+
+
+def test_fleet_batch_target_shrinks_on_any_unhealthy():
+    assert multihost.fleet_batch_target([HEALTHY, HEALTHY], 16) == 16
+    assert multihost.fleet_batch_target([HEALTHY, DEGRADED], 16) == 8
+    assert multihost.fleet_batch_target([EVICT], 16, 0.25) == 4
+    assert multihost.fleet_batch_target([DEGRADED], 1) == 1   # floor
+
+
+def test_host_source_absorbs_faults_permanently():
+    stats = ServeStats()
+    src = multihost._HostSource(it=iter(_items(2)), stats=stats)
+    assert src.pull() is not None
+    assert src.pull() is not None
+    assert src.pull() is None and src.exhausted and not src.draining
+    assert list(src.ctrl_word(False)[0]) == [0, 0, 0, 0]
+
+    def boom():
+        yield _items(1)[0]
+        raise RuntimeError("torn source")
+
+    stats = ServeStats()
+    src = multihost._HostSource(it=boom(), stats=stats)
+    assert src.pull() is not None
+    assert src.pull() is None
+    assert src.draining and isinstance(src.error, RuntimeError)
+    assert stats.drain_reason == "error"
+    assert list(src.ctrl_word(False)[0]) == [0, 0, 1, 1]
+    # pulls after the fault never touch the (dead) iterator again
+    assert src.pull() is None
+
+
+def test_host_source_guard_and_watchdog():
+    stats = ServeStats()
+    guard = PreemptionGuard()
+    try:
+        src = multihost._HostSource(it=iter(_items(3)), guard=guard,
+                                    stats=stats)
+        assert src.pull() is not None and not src.draining
+        guard.request()
+        # the already-begun pull still hands its item over (it will be
+        # dispatched — no accepted batch lost), but the host drains
+        assert src.pull() is not None
+        assert src.draining and stats.drain_reason == "preemption"
+        assert src.pull() is None
+    finally:
+        guard.uninstall()
+    stats = ServeStats()
+    dog = Watchdog(WatchdogConfig(warmup_steps=0, patience=1,
+                                  evict_patience=0))
+
+    def slow():
+        yield _items(1)[0]
+        time.sleep(0.05)
+        yield _items(1)[0]
+
+    src = multihost._HostSource(it=slow(), dog=dog, stats=stats)
+    assert src.pull() is not None
+    assert src.pull() is not None           # slow pull -> EVICT -> drain
+    assert src.draining and stats.drain_reason == "watchdog-evict"
+    assert list(src.ctrl_word(False)[0]) == [0, 2, 1, 0]
+
+
+# ------------------------------------------------- ServeStats ledger ---
+def test_serve_stats_fleet_ledger():
+    st = ServeStats()
+    st.observe_host(0, have=True, state=HEALTHY, draining=False)
+    st.observe_host(1, have=False, state=DEGRADED, draining=True)
+    st.observe_host(1, have=False, state=DEGRADED, draining=False,
+                    error=True)
+    st.mark_drain("fleet")
+    st.mark_drain("preemption")             # first cause sticks
+    led = st.ledger()
+    assert led["drain_reason"] == "fleet"
+    assert led["fleet"]["0"] == {"batches": 1, "keepalive": 0,
+                                 "state": HEALTHY, "draining": False,
+                                 "error": False}
+    assert led["fleet"]["1"]["keepalive"] == 2
+    assert led["fleet"]["1"]["draining"] and led["fleet"]["1"]["error"]
+
+
+# ---------------------------------------- single-host chaos degradation ---
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(0)
+    ref = random_reference(50_000, rng)
+    cfg = PipelineConfig()
+    sm = build_seedmap(ref, SeedMapConfig(table_bits=15))
+    sim = simulate_pairs(ref, 24, ReadSimConfig(sub_rate=2e-3), seed=1)
+    mapper = Mapper.from_index(sm, ref, cfg,
+                               ExecutionConfig(stream_batch=8))
+    return mapper, sim
+
+
+def _batches(sim, n):
+    for i in range(n):
+        yield sim.reads1[8 * i:8 * (i + 1)], sim.reads2[8 * i:8 * (i + 1)]
+
+
+def test_single_host_guard_drains_between_batches(world):
+    mapper, sim = world
+    assert multihost.process_count() == 1
+    ref_sr = mapper.map_stream(_batches(sim, 2))
+
+    guard = PreemptionGuard()
+    try:
+        # preemption lands between dispatches (on_result for batch 0
+        # fires once batch 1 is in flight, before batch 2 is pulled)
+        sr = multihost.map_stream(
+            mapper, _batches(sim, 3), guard=guard,
+            on_result=lambda i, res, n: i == 0 and guard.request())
+    finally:
+        guard.uninstall()
+    # batch 2 was never accepted; the accepted prefix is bit-identical
+    assert sr.n_pairs == 16 and sr.n_batches == 2
+    assert sr.totals == ref_sr.totals
+    assert sr.health["drain_reason"] == "preemption"
+    assert sr.health["n_hosts"] == 1 and sr.health["keepalive_rounds"] == 0
+
+
+def test_single_host_chaos_dry_and_health(world):
+    mapper, sim = world
+    stats = ServeStats()
+    sr = multihost.map_stream(
+        mapper, inject(_batches(sim, 3), ChaosSpec.parse("dry@0:2"),
+                       host=0),
+        serve_stats=stats)
+    assert sr.n_batches == 2 and sr.n_pairs == 16
+    assert sr.health["watchdog"] == HEALTHY
+    assert stats.fleet[0]["batches"] == 2
+
+
+def test_single_host_bypass_is_bitidentical(world):
+    # No guard/watchdog/stats: the keep-alive machinery is fully
+    # bypassed — same object contract as Mapper.map_stream.
+    mapper, sim = world
+    a = multihost.map_stream(mapper, _batches(sim, 3))
+    b = mapper.map_stream(_batches(sim, 3))
+    assert a.health is None
+    assert a.totals == b.totals and a.n_pairs == b.n_pairs
+
+
+# ------------------------------------------------ FrontDoor fleet hooks ---
+def test_frontdoor_observe_fleet_degrades_and_drains(world):
+    mapper, sim = world
+    fd = FrontDoor(mapper, FrontDoorConfig(degrade_factor=0.5,
+                                           record_requests=False))
+    try:
+        assert fd._target("pairs") == 8
+        fd.observe_fleet([{"host": 0, "state": HEALTHY},
+                          {"host": 1, "state": DEGRADED}])
+        assert fd._target("pairs") == 4     # peer straggler shrinks fill
+        assert not fd._draining
+        fd.observe_fleet([{"host": 0, "state": HEALTHY},
+                          {"host": 1, "state": HEALTHY}])
+        assert fd._target("pairs") == 8     # recovery restores it
+        fd.observe_fleet([{"host": 0, "state": HEALTHY, "draining": True},
+                          {"host": 1, "state": HEALTHY}])
+        assert fd._draining                 # peer drain drains this door
+        assert fd.stats.drain_reason == "fleet"
+        r = fd.submit("pairs", (sim.reads1[:2], sim.reads2[:2]))
+        assert r.status == "shed"
+        assert fd.stats.fleet[0]["batches"] >= 1
+    finally:
+        fd.close()
+
+
+def test_frontdoor_request_drain_sheds(world):
+    mapper, sim = world
+    fd = FrontDoor(mapper, FrontDoorConfig(record_requests=False))
+    try:
+        fd.request_drain("requested")
+        assert fd.stats.drain_reason == "requested"
+        assert fd.submit("pairs",
+                         (sim.reads1[:2], sim.reads2[:2])).status == "shed"
+        assert fd.report()["serve"]["drain_reason"] == "requested"
+    finally:
+        fd.close()
+
+
+def test_sigterm_spec_requires_guard_owner():
+    # documentation-by-test: inject() delivers a real SIGTERM, so a run
+    # without a PreemptionGuard would die by default disposition —
+    # serve.py --chaos installs one before wrapping the generator.
+    spec = ChaosSpec.parse("sigterm@0:0")
+    assert spec.faults[0].at == 0
+    assert os.getpid() > 0                  # (no delivery in this test)

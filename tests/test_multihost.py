@@ -1,4 +1,4 @@
-"""Two-process multi-host `map_stream` integration test.
+"""Two-process multi-host `map_stream` integration + chaos suite.
 
 Each worker is a separate jax *process* (its own runtime, one CPU device,
 gloo collectives) — the real multi-controller topology, not the 8-fake-
@@ -6,6 +6,12 @@ device single-process setup of tests/test_distributed.py.  The workers
 must run concurrently (every dispatch is a collective), so both are
 launched and then joined.  Workers print ``SKIP: <reason>`` when the
 environment lacks multi-process CPU support; the test skips with them.
+
+Scenarios beyond ``base`` inject deterministic faults on one host
+(`runtime.faultinject`) and assert the lockstep keep-alive protocol's
+guarantees: no deadlock, no accepted batch lost, accepted rounds
+bit-identical to the single-device reference, health ledger exact.  See
+tests/_multihost_worker.py for the per-scenario traces.
 """
 import os
 import socket
@@ -16,6 +22,12 @@ import pytest
 
 N_PROC = 2
 
+#: worker-side "ok:" assertions per scenario (init / clean stop /
+#: bit-identity / totals / health ledger / done)
+N_OK = 6
+
+SCENARIOS = ("base", "dry", "sigterm", "straggle", "torn")
+
 
 def _free_port() -> int:
     with socket.socket() as s:
@@ -24,14 +36,15 @@ def _free_port() -> int:
 
 
 @pytest.mark.timeout(600)
-def test_multihost_stream_matches_single_host():
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_multihost_stream_matches_single_host(scenario):
     worker = os.path.join(os.path.dirname(__file__), "_multihost_worker.py")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     port = str(_free_port())
     procs = [
         subprocess.Popen(
-            [sys.executable, worker, str(pid), str(N_PROC), port],
+            [sys.executable, worker, str(pid), str(N_PROC), port, scenario],
             env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
             text=True)
         for pid in range(N_PROC)
@@ -51,4 +64,5 @@ def test_multihost_stream_matches_single_host():
         pytest.skip("multi-process CPU jax unavailable: "
                     + next(o for _, o, _ in outs if "SKIP:" in o).strip())
     for rc, out, err in outs:
-        assert out.count("ok:") == 4, f"stdout:\n{out}\nstderr:\n{err}"
+        assert out.count("ok:") == N_OK, f"stdout:\n{out}\nstderr:\n{err}"
+        assert f"ok: done {scenario}" in out, f"stdout:\n{out}"

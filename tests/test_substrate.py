@@ -137,6 +137,17 @@ def test_watchdog_stragglers_do_not_poison_ema():
     assert dog.ema == ema_before
 
 
+def test_watchdog_zero_warmup_first_observe():
+    # Regression: warmup_steps=0 used to assert on the very first
+    # observe (no EMA had been folded).  The first sample must seed the
+    # EMA without triggering — a lone sample has no baseline to be slow
+    # against — and the machine must still degrade on real slowness.
+    dog = Watchdog(WatchdogConfig(warmup_steps=0, patience=1))
+    assert dog.observe(1.0) == HEALTHY
+    assert dog.ema == 1.0
+    assert dog.observe(50.0) == DEGRADED
+
+
 # ---------------------------------------------------------------- elastic --
 def test_remesh_no_failure_is_identity():
     p = plan_remesh(256, 0, model=16)
